@@ -1,0 +1,61 @@
+"""Render the roofline table (EXPERIMENTS.md §Roofline) from the dry-run
+JSON artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import json
+import os
+
+OUT_DIR = "experiments/dryrun"
+OPT_DIR = "experiments/dryrun_opt"
+
+
+def load_all(out_dir: str | None = None) -> list[dict]:
+    if out_dir is None:
+        out_dir = OPT_DIR if os.path.isdir(OPT_DIR) else OUT_DIR
+    rows = []
+    if not os.path.isdir(out_dir):
+        return rows
+    for f in sorted(os.listdir(out_dir)):
+        if f.endswith(".json"):
+            with open(os.path.join(out_dir, f)) as fh:
+                rows.append(json.load(fh))
+    return rows
+
+
+def markdown_table(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | step | compute (ms) | memory (ms) | "
+           "collective (ms) | bottleneck | useful |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']}"
+            f"{' tt' if r.get('tt') else ''} | {r['step_kind']} | "
+            f"{r['compute_s']*1e3:.1f} | {r['memory_s']*1e3:.1f} | "
+            f"{r['collective_s']*1e3:.1f} | {r['bottleneck']} | "
+            f"{r['useful_ratio']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> list[str]:
+    rows = load_all()
+    out = []
+    for r in rows:
+        if r["mesh"] != "16x16":
+            continue
+        dom = max(("compute_s", "memory_s", "collective_s"),
+                  key=lambda k: r[k])
+        out.append(f"roofline/{r['arch']}_{r['shape']},"
+                   f"{r[dom]*1e6:.0f},"
+                   f"bottleneck={r['bottleneck']} useful={r['useful_ratio']:.2f}"
+                   f" compute_ms={r['compute_s']*1e3:.1f}"
+                   f" memory_ms={r['memory_s']*1e3:.1f}"
+                   f" coll_ms={r['collective_s']*1e3:.1f}")
+    if not out:
+        out.append("roofline/no_dryrun_artifacts,0,"
+                   "run `python -m repro.launch.dryrun --all` first")
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table(load_all()))

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  table1_memory      — paper Table 1 (memory reduction, 5 methods)
+  speed_tensorized   — paper §5 runtime comparison (fwd+bwd per batch-64)
+  kernel_analysis    — paper Table 2 analogue (per-kernel VMEM/FLOPs/AI)
+  rank_adapt_curve   — paper §3.1 rank-shrinkage trajectory
+  roofline_table     — §Roofline terms from the dry-run artifacts (if any)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (kernel_analysis, rank_adapt_curve, roofline_table,
+                   speed_tensorized, table1_memory)
+    modules = [
+        ("table1_memory", table1_memory),
+        ("speed_tensorized", speed_tensorized),
+        ("kernel_analysis", kernel_analysis),
+        ("rank_adapt_curve", rank_adapt_curve),
+        ("roofline_table", roofline_table),
+    ]
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in modules:
+        try:
+            for row in mod.run():
+                print(row)
+        except Exception as e:
+            failed.append(name)
+            print(f"{name}/ERROR,0,{e!r}", file=sys.stderr)
+            traceback.print_exc()
+    if failed:
+        raise SystemExit(f"benchmarks failed: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Quickstart: the paper's technique in 40 lines.
+
+Builds a TT-factorized, rank-adaptive, 4-bit-quantized linear layer, trains
+it on a synthetic regression task, and shows the rank shrinking while the
+quantized forward stays accurate.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import QuantConfig, TTConfig
+from repro.core import rank_adapt as RA
+from repro.core import tt_layer as TL
+from repro.core import ttm
+
+tt = TTConfig(enable=True, d=3, max_rank=12, rank_adapt=True,
+              prune_threshold=1e-2)
+qc = QuantConfig(enable=True, weight_bits=4, act_bits=8, grad_bits=16)
+
+# a true low-TT-rank target to recover
+true_spec = ttm.make_spec(128, 256, 3, 3)
+true_cores = ttm.init_cores(jax.random.PRNGKey(42), true_spec, scale=1.0)
+x = jax.random.normal(jax.random.PRNGKey(1), (512, 256))
+y = ttm.ttm_matvec(true_cores, x, true_spec)
+
+params, spec = TL.tt_linear_init(jax.random.PRNGKey(0), 128, 256, tt)
+print(f"dense params: {spec.dense_params:,}  TT params: {spec.num_params:,} "
+      f"({spec.compression:.1f}x smaller)")
+
+
+def loss_fn(params):
+    pred = TL.tt_linear_apply(params, x, spec, tt, qc)
+    return (jnp.mean(jnp.square(pred - y))
+            + 0.003 * TL.tt_prior_loss(params, spec, tt))
+
+
+grad_fn = jax.jit(jax.grad(loss_fn, allow_int=True))
+lr = 0.02
+for step in range(801):
+    g = grad_fn(params)
+    params = jax.tree.map(
+        lambda p, gg: p - lr * gg
+        if hasattr(gg, "dtype") and gg.dtype != jax.dtypes.float0
+        and jnp.issubdtype(p.dtype, jnp.floating) else p, params, g)
+    params = TL.tt_lambda_update(params, spec, tt)   # closed-form Eq. (4)
+    if step % 200 == 0:
+        live, total = TL.tt_param_count(params, spec, tt)
+        lambdas = TL.get_lambdas(params, spec)
+        eff = RA.effective_ranks(lambdas, tt.prune_threshold)
+        print(f"step {step:4d}  loss {float(loss_fn(params)):.5f}  "
+              f"effective ranks {eff}  live params {live}/{total}")
+
+print("\nrank-adaptive 4-bit TT training: ranks shrank one-shot, "
+      "no rank search (paper §3).")

@@ -1,0 +1,70 @@
+"""Serving example: batched prefill + autoregressive decode with a KV cache
+on a reduced config of any zoo arch (GQA / MLA / RWKV / hybrid all work —
+the cache type adapts automatically).
+
+    PYTHONPATH=src python examples/serve_decode.py --arch internlm2-1.8b
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+import repro.configs as C
+from repro.models import build_lm, init_lm, lm_decode_step, lm_init_cache
+from repro.launch.steps import make_prefill_step
+from repro.sharding import ShardPlan
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = C.get_reduced(args.arch).replace(dtype="float32", remat="none")
+    plan = ShardPlan(mesh=None)
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    b, p, g = args.batch, args.prompt_len, args.gen_len
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
+                                cfg.vocab_size)
+    total = p + g
+
+    # prefill: one forward pass builds the cache for every request
+    prefill = jax.jit(make_prefill_step(lm, plan))
+    t0 = time.time()
+    if cfg.is_encoder:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    logits, cache = prefill(params, {"tokens": prompt})
+    # pad caches out to the full horizon for attention archs
+    def pad_seq(a):
+        if a.ndim >= 3 and a.shape[2] == p:   # (L, B, S, ...)
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, g)
+            return jnp.pad(a, pad)
+        return a
+    cache = jax.tree.map(pad_seq, cache)
+    print(f"prefill {b}x{p} in {time.time()-t0:.2f}s")
+
+    step = jax.jit(lambda pr, c, t, l: lm_decode_step(pr, c, t, l, lm, plan))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    out = [tok]
+    t0 = time.time()
+    for i in range(g - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(p + i))
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        out.append(tok)
+    dt = time.time() - t0
+    gen = jnp.concatenate(out, axis=1)
+    print(f"decoded {b}x{g-1} tokens in {dt:.2f}s "
+          f"({b*(g-1)/max(dt,1e-9):.0f} tok/s greedy)")
+    print("sample:", gen[0, :16].tolist())
+
+
+if __name__ == "__main__":
+    main()

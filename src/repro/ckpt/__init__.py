@@ -1,0 +1,3 @@
+from . import checkpoint  # noqa: F401
+from .checkpoint import (AsyncCheckpointer, install_preemption_handler,  # noqa: F401
+                         latest_step, load, save, step_path)

@@ -1,0 +1,4 @@
+"""Core: the paper's contribution — TTM algebra, Bayesian rank adaptation,
+low-precision numerics (pow-2 fixed point + STE + scale manager), and the
+composed TT linear layer."""
+from . import quant, rank_adapt, tt_layer, ttm  # noqa: F401

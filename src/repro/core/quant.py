@@ -1,0 +1,175 @@
+"""Low-precision training numerics (paper §3.2-3.3).
+
+- Power-of-2-scaled symmetric fixed point: q = clip(round(x / 2^k), -2^{b-1}, 2^{b-1}-1)
+- Fake-quant with clipped straight-through estimator (STE): gradient passes
+  where the pre-quant value was inside the representable range, zero outside
+  (the paper's "clipped ReLU" STE).
+- Automatic scale selection (§3.3): track the running mean of |x / 2^k| and
+  bump k up/down to keep it inside [0.1, 0.3]. Scales are shared across
+  samples and neurons of the same tensor-site; TT-factor scales are fixed.
+- BinaryConnect (Courbariaux et al. 2015): full-precision buffer updated with
+  gradients taken w.r.t. the quantized parameters (see optim/binaryconnect.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def qrange(bits: int) -> tuple[float, float]:
+    return -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def fake_quant(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
+    """Quantize-dequantize with pow-2 scale; STE in the backward pass."""
+    scale = jnp.exp2(scale_log2).astype(x.dtype)
+    lo, hi = qrange(bits)
+    q = jnp.clip(jnp.round(x / scale), lo, hi)
+    return q * scale
+
+
+def _fq_fwd(x, scale_log2, bits):
+    scale = jnp.exp2(scale_log2).astype(x.dtype)
+    lo, hi = qrange(bits)
+    inside = (x / scale >= lo) & (x / scale <= hi)
+    q = jnp.clip(jnp.round(x / scale), lo, hi)
+    return q * scale, inside
+
+
+def _fq_bwd(bits, inside, g):
+    # clipped STE: pass gradient only where |x| was representable
+    return (jnp.where(inside, g, 0.0).astype(g.dtype), None)
+
+
+fake_quant.defvjp(_fq_fwd, _fq_bwd)
+
+
+def quantize_store(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
+    """Pure quantize (no STE) — the Q(.) of paper Eq. (3); used on the
+    BinaryConnect buffer after the optimizer step."""
+    scale = jnp.exp2(scale_log2).astype(x.dtype)
+    lo, hi = qrange(bits)
+    return jnp.clip(jnp.round(x / scale), lo, hi) * scale
+
+
+# ---------------------------------------------------------------------------
+# Scale manager (§3.3)
+# ---------------------------------------------------------------------------
+
+class ScaleState(NamedTuple):
+    """Per-site dynamic scale: k (log2 scale) and the tracked mean |x/2^k|."""
+    log2: jax.Array     # int32 scalar
+    mean_abs: jax.Array  # f32 scalar, EMA of mean |x| / 2^k
+
+
+def init_scale(log2: int = 0) -> ScaleState:
+    return ScaleState(jnp.asarray(log2, jnp.int32), jnp.asarray(0.2, jnp.float32))
+
+
+def update_scale(state: ScaleState, x: jax.Array, *, lo: float = 0.1,
+                 hi: float = 0.3, ema: float = 0.9) -> ScaleState:
+    """Track mean|x/2^k| and adjust k to hold it in [lo, hi] (paper §3.3).
+
+    jit-friendly; runs on stop_gradient(x).
+    """
+    x = jax.lax.stop_gradient(x).astype(jnp.float32)
+    m = jnp.mean(jnp.abs(x)) / jnp.exp2(state.log2.astype(jnp.float32))
+    m = ema * state.mean_abs + (1.0 - ema) * m
+    up = (m > hi).astype(jnp.int32)      # too large -> coarser scale (k+1)
+    dn = (m < lo).astype(jnp.int32)      # too small -> finer scale (k-1)
+    new_log2 = state.log2 + up - dn
+    # after a bump the tracked statistic halves/doubles accordingly
+    m = m * jnp.exp2(-(up - dn).astype(jnp.float32))
+    return ScaleState(new_log2, m)
+
+
+def quant_act(x: jax.Array, state: ScaleState, bits: int) -> jax.Array:
+    """Fake-quant an activation with its managed scale.
+
+    The *hardware* scale is 2^k relative to the fractional fixed-point grid:
+    an 8-bit tensor with scale k holds values q*2^k/2^{b-1}*2^{b-1}... we fold
+    everything into: representable range = [-2^{b-1}, 2^{b-1}-1] * step where
+    step = 2^k / 2^{b-1}  (so "mean |x|/2^k in [0.1,0.3]" uses a healthy
+    fraction of the range).
+    """
+    step_log2 = state.log2.astype(jnp.float32) - (bits - 1)
+    return fake_quant(x, step_log2, bits)
+
+
+class ActQuant(NamedTuple):
+    """A forward-activation + backward-gradient quantization site.
+
+    The paper quantizes activations to 8 bits on the forward pass and
+    gradients to 16 bits on the backward pass, with independently managed
+    scales.
+    """
+    act: ScaleState
+    grad: ScaleState
+    probe: jax.Array     # 0-valued scalar; its *gradient* carries mean|g| stats
+
+
+def init_act_quant() -> ActQuant:
+    return ActQuant(init_scale(0), init_scale(0), jnp.zeros((), jnp.float32))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _quant_edge(x, act_log2, grad_log2, probe, act_bits: int, grad_bits: int):
+    step = act_log2.astype(jnp.float32) - (act_bits - 1)
+    scale = jnp.exp2(step).astype(x.dtype)
+    lo, hi = qrange(act_bits)
+    return jnp.clip(jnp.round(x / scale), lo, hi) * scale
+
+
+def _qe_fwd(x, act_log2, grad_log2, probe, act_bits, grad_bits):
+    step = act_log2.astype(jnp.float32) - (act_bits - 1)
+    scale = jnp.exp2(step).astype(x.dtype)
+    lo, hi = qrange(act_bits)
+    inside = (x / scale >= lo) & (x / scale <= hi)
+    y = jnp.clip(jnp.round(x / scale), lo, hi) * scale
+    return y, (inside, grad_log2)
+
+
+def _qe_bwd(act_bits, grad_bits, res, g):
+    inside, grad_log2 = res
+    # quantize the incoming activation-gradient to grad_bits (paper: 16-bit)
+    step = grad_log2.astype(jnp.float32) - (grad_bits - 1)
+    scale = jnp.exp2(step).astype(g.dtype)
+    lo, hi = qrange(grad_bits)
+    gq = jnp.clip(jnp.round(g / scale), lo, hi) * scale
+    gq = jnp.where(inside, gq, 0.0).astype(g.dtype)
+    # probe cotangent = mean |g| / 2^k : the scale-manager statistic.
+    stat = jnp.mean(jnp.abs(g.astype(jnp.float32))) / jnp.exp2(grad_log2.astype(jnp.float32))
+    return (gq, jnp.zeros_like(grad_log2, jnp.float32),
+            jnp.zeros_like(grad_log2, jnp.float32), stat)
+
+
+_quant_edge.defvjp(_qe_fwd, _qe_bwd)
+
+
+def quant_edge(x: jax.Array, site: ActQuant, act_bits: int, grad_bits: int) -> jax.Array:
+    """Insert an (8-bit fwd, 16-bit bwd) quantization point on tensor ``x``.
+
+    Differentiating the containing function w.r.t. ``site.probe`` yields the
+    backward-gradient magnitude statistic used by ``update_act_quant``.
+    """
+    return _quant_edge(x, site.act.log2, site.grad.log2, site.probe,
+                       act_bits, grad_bits)
+
+
+def update_act_quant(site: ActQuant, x: jax.Array, grad_stat: jax.Array | None,
+                     lo: float, hi: float, ema: float) -> ActQuant:
+    """Scale-manager update for one site. ``grad_stat`` is the cotangent of
+    ``site.probe`` (mean |g|/2^k observed on the backward pass)."""
+    act = update_scale(site.act, x, lo=lo, hi=hi, ema=ema)
+    grad = site.grad
+    if grad_stat is not None:
+        m = ema * grad.mean_abs + (1.0 - ema) * grad_stat
+        up = (m > hi).astype(jnp.int32)
+        dn = (m < lo).astype(jnp.int32)
+        grad = ScaleState(grad.log2 + up - dn,
+                          m * jnp.exp2(-(up - dn).astype(jnp.float32)))
+    return ActQuant(act, grad, site.probe)

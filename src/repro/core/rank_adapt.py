@@ -1,0 +1,118 @@
+"""Rank-adaptive tensorized training (paper §3.1, Eqs. 1-2 and 4).
+
+The loss adds g(θ, λ) = Σ_{n=1}^{d-1} Σ_{r}  ‖G_n(:,:,:,r)‖_F² / λ_n(r)
+                                         + (1 + R_{n-1} I_n J_n)/2 · log λ_n(r)
+
+(negative log-posterior of the Hawkins-Liu-Zhang Bayesian model). λ is updated
+in closed form each step (Eq. 4):
+
+    λ_n(r) = 2 / (1 + R_{n-1} I_n J_n) · ‖G_n(:,:,:,r)‖_F²
+
+which is exactly the stationary point of g in λ. Slices whose λ collapses
+toward 0 are pruned (masked during jit training; physically sliced at export).
+"""
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from .ttm import TTMSpec
+
+
+def slice_sqnorms(core: jax.Array) -> jax.Array:
+    """‖G_n(:,:,:,r)‖_F² for every r along the last (rank) axis -> (R_n,)."""
+    return jnp.sum(jnp.square(core.astype(jnp.float32)), axis=(0, 1, 2))
+
+
+def group_size(spec: TTMSpec, n: int) -> int:
+    """1 + R_{n-1} I_n J_n for core n (0-based)."""
+    return 1 + spec.ranks[n] * spec.i_dims[n] * spec.j_dims[n]
+
+
+# λ is floored to keep the prior gradient 2·G/λ bounded once a slice has
+# collapsed (otherwise 1/λ → ∞ and SGD diverges; the floor turns the pull
+# on dead slices into a stable exponential decay).
+LAMBDA_FLOOR = 1e-8
+
+
+def init_lambdas(spec: TTMSpec) -> list[jax.Array]:
+    """λ_n for n = 0..d-2 (no λ for the last core: R_d == 1)."""
+    return [jnp.ones((spec.ranks[n + 1],), jnp.float32) for n in range(spec.d - 1)]
+
+
+def update_lambdas(cores: Sequence[jax.Array], spec: TTMSpec,
+                   eps: float = LAMBDA_FLOOR) -> list[jax.Array]:
+    """Closed-form λ update (Eq. 4), floored for numerical stability."""
+    return [
+        jnp.maximum(2.0 / group_size(spec, n) * slice_sqnorms(cores[n]), eps)
+        for n in range(spec.d - 1)
+    ]
+
+
+def prior_loss(cores: Sequence[jax.Array], lambdas: Sequence[jax.Array],
+               spec: TTMSpec) -> jax.Array:
+    """g(θ, λ) (Eq. 2). λ is treated as constant within the SGD step
+    (stop_gradient), matching the paper's alternating update: SGD on θ,
+    closed-form on λ."""
+    total = jnp.zeros((), jnp.float32)
+    for n in range(spec.d - 1):
+        lam = jnp.maximum(jax.lax.stop_gradient(lambdas[n]), LAMBDA_FLOOR)
+        sq = slice_sqnorms(cores[n])
+        c = 0.5 * group_size(spec, n)
+        total = total + jnp.sum(sq / lam + c * jnp.log(lam))
+    return total
+
+
+def rank_masks(lambdas: Sequence[jax.Array], threshold: float) -> list[jax.Array]:
+    """Binary keep-masks per adapted rank: keep r if λ(r) > threshold·max λ."""
+    masks = []
+    for lam in lambdas:
+        masks.append((lam > threshold * jnp.max(lam)).astype(jnp.float32))
+    return masks
+
+
+def apply_masks(cores: Sequence[jax.Array], masks: Sequence[jax.Array]) -> list[jax.Array]:
+    """Zero out pruned rank slices. mask n applies to core n's last axis and
+    core n+1's first axis (one multiply suffices for the matvec product; we
+    mask the last axis of core n)."""
+    out = list(cores)
+    for n, m in enumerate(masks):
+        out[n] = out[n] * m[None, None, None, :].astype(out[n].dtype)
+    return out
+
+
+def effective_ranks(lambdas: Sequence[jax.Array], threshold: float) -> list[int]:
+    return [int(jnp.sum(lam > threshold * jnp.max(lam))) for lam in lambdas]
+
+
+def compress_cores(cores: Sequence[jax.Array], lambdas: Sequence[jax.Array],
+                   spec: TTMSpec, threshold: float) -> tuple[list[jax.Array], TTMSpec]:
+    """Physically slice away pruned ranks (export / checkpoint path; not jit)."""
+    d = spec.d
+    keep = [jnp.nonzero(lam > threshold * jnp.max(lam))[0] for lam in lambdas]
+    new_cores = []
+    new_ranks = [1]
+    for n in range(d):
+        c = cores[n]
+        if n > 0:
+            c = jnp.take(c, keep[n - 1], axis=0)
+        if n < d - 1:
+            c = jnp.take(c, keep[n], axis=3)
+        new_cores.append(c)
+        new_ranks.append(c.shape[3])
+    new_spec = TTMSpec(spec.j_dims, spec.i_dims, tuple(new_ranks))
+    return new_cores, new_spec
+
+
+def tt_memory_bits(spec: TTMSpec, weight_bits: int, eff_ranks: list[int] | None = None) -> int:
+    """Model-parameter memory in bits (paper Table 1 accounting)."""
+    ranks = list(spec.ranks)
+    if eff_ranks is not None:
+        ranks = [1] + [int(r) for r in eff_ranks] + [1]
+    total = 0
+    for n in range(spec.d):
+        total += ranks[n] * spec.j_dims[n] * spec.i_dims[n] * ranks[n + 1]
+    return total * weight_bits

@@ -1,0 +1,116 @@
+"""TT-factorized linear layer: TTM algebra + rank adaptation + QAT composed.
+
+Pure-functional: params are pytrees (dicts), specs are static. This is the
+first-class layer type every model in the zoo can select per weight-site
+(see ``models/common.py::linear``).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import QuantConfig, TTConfig
+from . import quant as Q
+from . import rank_adapt as RA
+from .ttm import TTMSpec, init_cores, make_spec, ttm_matvec
+
+Params = dict[str, Any]
+
+
+def weight_scale_log2(sigma: float, bits: int) -> int:
+    """Fixed pow-2 *step* for TT factors: cover ~4 sigma with 2^{bits-1} levels."""
+    full = 4.0 * max(sigma, 1e-8)
+    return int(np.ceil(np.log2(full / 2 ** (bits - 1))))
+
+
+def tt_linear_init(key: jax.Array, out_dim: int, in_dim: int, tt: TTConfig,
+                   dtype=jnp.float32, use_bias: bool = True,
+                   j_dims=None, i_dims=None, ranks=None) -> tuple[Params, TTMSpec]:
+    spec = make_spec(out_dim, in_dim, tt.d, tt.max_rank,
+                     j_dims=j_dims, i_dims=i_dims, ranks=ranks)
+    cores = init_cores(key, spec, dtype=dtype)
+    params: Params = {f"core_{n}": c for n, c in enumerate(cores)}
+    if use_bias:
+        params["bias"] = jnp.zeros((out_dim,), dtype)
+    if tt.rank_adapt:
+        for n, lam in enumerate(RA.init_lambdas(spec)):
+            params[f"lambda_{n}"] = lam
+    # fixed per-core quant step (paper: TT-factor scales are fixed);
+    # sigma from the init formula (analytic — keeps init eval_shape-able)
+    target_var = 2.0 / (spec.in_dim + spec.out_dim)
+    rank_prod = math.prod(spec.ranks[1:spec.d]) if spec.d > 1 else 1.0
+    sigma = ((target_var / rank_prod) ** (1.0 / spec.d)) ** 0.5
+    params["wscale_log2"] = jnp.asarray(
+        [weight_scale_log2(sigma, 4)] * spec.d, jnp.int32)
+    return params, spec
+
+
+def get_cores(params: Params, spec: TTMSpec) -> list[jax.Array]:
+    return [params[f"core_{n}"] for n in range(spec.d)]
+
+
+def get_lambdas(params: Params, spec: TTMSpec) -> list[jax.Array] | None:
+    if f"lambda_0" not in params and spec.d > 1:
+        return None
+    return [params[f"lambda_{n}"] for n in range(spec.d - 1)]
+
+
+def effective_cores(params: Params, spec: TTMSpec, tt: TTConfig,
+                    qc: QuantConfig) -> list[jax.Array]:
+    """Cores as seen by the forward pass: rank-masked then fake-quantized."""
+    cores = get_cores(params, spec)
+    if tt.rank_adapt and spec.d > 1:
+        lambdas = get_lambdas(params, spec)
+        masks = RA.rank_masks([jax.lax.stop_gradient(l) for l in lambdas],
+                              tt.prune_threshold)
+        cores = RA.apply_masks(cores, masks)
+    if qc.enable:
+        steps = params["wscale_log2"]
+        cores = [Q.fake_quant(c, steps[n].astype(jnp.float32), qc.weight_bits)
+                 for n, c in enumerate(cores)]
+    return cores
+
+
+def tt_linear_apply(params: Params, x: jax.Array, spec: TTMSpec, tt: TTConfig,
+                    qc: QuantConfig) -> jax.Array:
+    cores = effective_cores(params, spec, tt, qc)
+    y = ttm_matvec([c.astype(x.dtype) for c in cores], x, spec)
+    if "bias" in params:
+        y = y + params["bias"].astype(y.dtype)
+    return y
+
+
+def tt_prior_loss(params: Params, spec: TTMSpec, tt: TTConfig) -> jax.Array:
+    """g(θ, λ) contribution of this layer (0 if rank adaptation disabled)."""
+    if not tt.rank_adapt or spec.d < 2:
+        return jnp.zeros((), jnp.float32)
+    cores = get_cores(params, spec)
+    lambdas = get_lambdas(params, spec)
+    return tt.gamma * RA.prior_loss(cores, lambdas, spec)
+
+
+def tt_lambda_update(params: Params, spec: TTMSpec, tt: TTConfig) -> Params:
+    """Closed-form Eq.(4) update of the λ entries (applied post-step)."""
+    if not tt.rank_adapt or spec.d < 2:
+        return params
+    cores = get_cores(params, spec)
+    new = dict(params)
+    for n, lam in enumerate(RA.update_lambdas(cores, spec)):
+        new[f"lambda_{n}"] = lam
+    return new
+
+
+def tt_param_count(params: Params, spec: TTMSpec, tt: TTConfig) -> tuple[int, int]:
+    """(live_params, total_params) after rank pruning by current λ."""
+    lambdas = get_lambdas(params, spec)
+    if lambdas is None:
+        return spec.num_params, spec.num_params
+    eff = RA.effective_ranks(lambdas, tt.prune_threshold)
+    ranks = [1] + eff + [1]
+    live = sum(ranks[n] * spec.j_dims[n] * spec.i_dims[n] * ranks[n + 1]
+               for n in range(spec.d))
+    return live, spec.num_params

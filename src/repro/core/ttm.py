@@ -1,0 +1,312 @@
+"""Tensor-Train-Matrix (TTM) algebra (paper §2, Appendix A).
+
+A weight matrix ``W ∈ R^{J×I}`` with ``I = ∏ I_n``, ``J = ∏ J_n`` is represented
+by ``d`` cores ``G_n ∈ R^{R_{n-1} × J_n × I_n × R_n}`` with ``R_0 = R_d = 1``:
+
+    W(j_1..j_d, i_1..i_d) = G_1(:,j_1,i_1,:) @ G_2(:,j_2,i_2,:) @ ... @ G_d(:,j_d,i_d,:)
+
+Forward ``y = W x`` is the contraction chain of paper Eqs. (8)-(10): contract the
+input tensor with G_d first, then G_{d-1}, ..., G_1.  We implement the chain with
+einsum (XLA maps each step to an MXU matmul); the Pallas kernels in
+``repro.kernels`` implement the same two canonical contraction forms the paper's
+PE1/PE2 use, and ``ttm_matvec_pe`` below routes through them.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial, reduce
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Shape factorization helpers
+# ---------------------------------------------------------------------------
+
+def _factorize(n: int, d: int) -> tuple[int, ...]:
+    """Split integer ``n`` into ``d`` factors, as balanced as possible.
+
+    Uses the prime factorization and greedily assigns the largest primes to the
+    currently-smallest bucket, so e.g. 7168 -> (16, 28, 16) for d=3.
+    """
+    if d == 1:
+        return (n,)
+    primes: list[int] = []
+    m = n
+    p = 2
+    while p * p <= m:
+        while m % p == 0:
+            primes.append(p)
+            m //= p
+        p += 1
+    if m > 1:
+        primes.append(m)
+    buckets = [1] * d
+    for q in sorted(primes, reverse=True):
+        buckets[int(np.argmin(buckets))] *= q
+    return tuple(sorted(buckets))
+
+
+def auto_factorize(out_dim: int, in_dim: int, d: int) -> tuple[tuple[int, ...], tuple[int, ...]]:
+    """Choose (J_1..J_d), (I_1..I_d) for a (out_dim, in_dim) matrix."""
+    return _factorize(out_dim, d), _factorize(in_dim, d)
+
+
+def clip_ranks(j_dims: tuple[int, ...], i_dims: tuple[int, ...], max_rank: int) -> tuple[int, ...]:
+    """TT-ranks R_0..R_d: R_n <= min(prod_left, prod_right, max_rank)."""
+    d = len(j_dims)
+    ranks = [1]
+    for n in range(1, d):
+        left = math.prod(j_dims[:n]) * math.prod(i_dims[:n])
+        right = math.prod(j_dims[n:]) * math.prod(i_dims[n:])
+        ranks.append(int(min(left, right, max_rank)))
+    ranks.append(1)
+    return tuple(ranks)
+
+
+@dataclass(frozen=True)
+class TTMSpec:
+    """Static description of one TTM-factorized matrix (out = J, in = I)."""
+    j_dims: tuple[int, ...]
+    i_dims: tuple[int, ...]
+    ranks: tuple[int, ...]          # length d+1, ranks[0] == ranks[-1] == 1
+
+    @property
+    def d(self) -> int:
+        return len(self.j_dims)
+
+    @property
+    def out_dim(self) -> int:
+        return math.prod(self.j_dims)
+
+    @property
+    def in_dim(self) -> int:
+        return math.prod(self.i_dims)
+
+    @property
+    def core_shapes(self) -> tuple[tuple[int, int, int, int], ...]:
+        return tuple(
+            (self.ranks[n], self.j_dims[n], self.i_dims[n], self.ranks[n + 1])
+            for n in range(self.d)
+        )
+
+    @property
+    def num_params(self) -> int:
+        return sum(math.prod(s) for s in self.core_shapes)
+
+    @property
+    def dense_params(self) -> int:
+        return self.out_dim * self.in_dim
+
+    @property
+    def compression(self) -> float:
+        return self.dense_params / max(self.num_params, 1)
+
+
+def make_spec(out_dim: int, in_dim: int, d: int, max_rank: int,
+              j_dims: tuple[int, ...] | None = None,
+              i_dims: tuple[int, ...] | None = None,
+              ranks: tuple[int, ...] | None = None) -> TTMSpec:
+    if j_dims is None or i_dims is None:
+        j_auto, i_auto = auto_factorize(out_dim, in_dim, d)
+        j_dims = j_dims or j_auto
+        i_dims = i_dims or i_auto
+    assert math.prod(j_dims) == out_dim, (j_dims, out_dim)
+    assert math.prod(i_dims) == in_dim, (i_dims, in_dim)
+    if ranks is None:
+        ranks = clip_ranks(j_dims, i_dims, max_rank)
+    return TTMSpec(tuple(j_dims), tuple(i_dims), tuple(ranks))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def init_cores(key: jax.Array, spec: TTMSpec, dtype=jnp.float32,
+               scale: float | None = None) -> list[jax.Array]:
+    """Initialize cores so that the reconstructed W has Glorot-like variance.
+
+    var(W_elem) = prod_n var(G_n_elem) * prod_{n<d} R_n   (independent cores)
+    Target var(W) = 2 / (I + J)  =>  per-core sigma solves the product.
+    """
+    d = spec.d
+    target_var = scale if scale is not None else 2.0 / (spec.in_dim + spec.out_dim)
+    rank_prod = math.prod(spec.ranks[1:d]) if d > 1 else 1.0
+    per_core_var = (target_var / rank_prod) ** (1.0 / d)
+    sigma = per_core_var ** 0.5
+    keys = jax.random.split(key, d)
+    return [
+        (jax.random.normal(keys[n], spec.core_shapes[n], dtype=jnp.float32) * sigma).astype(dtype)
+        for n in range(d)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Contraction chain (paper Eqs. 8-10) — einsum path
+# ---------------------------------------------------------------------------
+
+def ttm_matvec(cores: list[jax.Array], x: jax.Array, spec: TTMSpec) -> jax.Array:
+    """y = W x for batched input x: (..., I) -> (..., J).
+
+    Contracts right-to-left exactly as paper Eqs. (8)-(10):
+      Z_1(b, i_1..i_{d-1}, r_{d-1}, j_d)         = sum_{i_d}  X * G_d
+      Z_2(b, i_1..i_{d-2}, r_{d-2}, j_{d-1} j_d) = sum_{i_{d-1} r_{d-1}} Z_1 * G_{d-1}
+      ...
+      Y(b, j_1..j_d)                             = sum_{i_1 r_1} Z_{d-1} * G_1
+
+    Each step is a single reshaped matmul:
+      (b*left, acc, i_n*r_in) @ (i_n*r_in, r_out*j_n)
+    where acc is the accumulated trailing (j_{n+1}..j_{d}) block.
+    """
+    d = spec.d
+    batch_shape = x.shape[:-1]
+    b = math.prod(batch_shape) if batch_shape else 1
+    z = x.reshape(b, spec.in_dim)   # layout (b, i_0 .. i_{d-1})
+    acc = 1                         # accumulated J block (trailing)
+    r_in = 1                        # == ranks[d]
+    for n in range(d - 1, -1, -1):
+        i_n, j_n, r_out = spec.i_dims[n], spec.j_dims[n], spec.ranks[n]
+        left = math.prod(spec.i_dims[:n]) if n > 0 else 1
+        # z layout: (b, i_0..i_{n-1}, i_n, r_in, acc) -> expose matmul dims
+        z = z.reshape(b * left, i_n * r_in, acc)
+        g = cores[n]                # (r_out, j_n, i_n, r_in)
+        gm = g.transpose(2, 3, 0, 1).reshape(i_n * r_in, r_out * j_n)
+        # (b*left, acc, i_n*r_in) @ (i_n*r_in, r_out*j_n)
+        z = jnp.einsum("xkc,kd->xdc", z, gm)
+        # output layout (b*left, r_out*j_n, acc): trailing = (r_out, j_n, acc)
+        acc *= j_n
+        r_in = r_out
+        z = z.reshape(b * left, r_out * acc)
+    return z.reshape(batch_shape + (spec.out_dim,))
+
+
+def ttm_to_dense(cores: list[jax.Array], spec: TTMSpec) -> jax.Array:
+    """Materialize W (J, I). Test/export only — O(J*I) memory."""
+    d = spec.d
+    # result tensor over (j_1, i_1, ..., j_n, i_n, R_n)
+    w = cores[0].reshape(spec.j_dims[0] * spec.i_dims[0], spec.ranks[1])
+    for n in range(1, d):
+        g = cores[n].reshape(spec.ranks[n], -1)   # (R_n, J_n*I_n*R_{n+1})
+        w = (w @ g).reshape(-1, spec.ranks[n + 1])
+    # w: (j1,i1,j2,i2,...,jd,id) flattened -> permute to (j1..jd, i1..id)
+    w = w.reshape(sum(((spec.j_dims[n], spec.i_dims[n]) for n in range(d)), ()))
+    perm = list(range(0, 2 * d, 2)) + list(range(1, 2 * d, 2))
+    w = w.transpose(perm)
+    return w.reshape(spec.out_dim, spec.in_dim)
+
+
+def ttm_flops_matvec(spec: TTMSpec, batch: int) -> int:
+    """MACs*2 of the Eq.(8)-(10) chain for `batch` rows."""
+    d = spec.d
+    total = 0
+    for k in range(d):
+        n = d - 1 - k
+        left = math.prod(spec.i_dims[:n])
+        right_j = math.prod(spec.j_dims[n + 1:]) if n + 1 < d else 1
+        # contraction: (b*left*right_j, i_n*r_in) x (i_n*r_in, r_out*j_n)
+        total += 2 * batch * left * right_j * spec.i_dims[n] * spec.ranks[n + 1] \
+            * spec.ranks[n] * spec.j_dims[n]
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Canonical PE forms (paper Eqs. 5-6) — pure-jnp references used by kernels
+# and by the PE-routed matvec below.
+# ---------------------------------------------------------------------------
+
+def pe1_contract(z: jax.Array, g: jax.Array) -> jax.Array:
+    """PE1 (Eq. 5): Z'(a,d) = sum_{b,c} Z(a,b,c) * G(b,d,c)."""
+    return jnp.einsum("abc,bdc->ad", z, g)
+
+
+def pe2_contract(z: jax.Array, g: jax.Array) -> jax.Array:
+    """PE2 (Eq. 6): Z'(a,d,c) = sum_b Z(a,b,c) * G(b,d)."""
+    return jnp.einsum("abc,bd->adc", z, g)
+
+
+def pe3_outer(x: jax.Array, ybar: jax.Array) -> jax.Array:
+    """PE3: batched outer product  What(j, i) = sum_b Ybar(b,j) * X(b,i).
+
+    (On TPU this is a matmul over the batch dim — see DESIGN.md §2.)
+    """
+    return jnp.einsum("bj,bi->ji", ybar, x)
+
+
+def core_grads_from_what(what: jax.Array, cores: list[jax.Array],
+                         spec: TTMSpec) -> list[jax.Array]:
+    """Per-core gradients from the full-weight gradient Ŵ (paper Appendix
+    A.2, Eqs. 14-19): ĝ_n = Ŵ contracted with every core except n.
+
+    This is the paper's PE3-fed gradient path ("more efficient [when] the
+    batch size is [large]"); used at FMNIST scale and as the oracle that the
+    autodiff path must match (tests/test_ttm.py).
+    """
+    d = spec.d
+    wt = what.reshape(spec.j_dims + spec.i_dims)
+    perm = [x for n in range(d) for x in (n, d + n)]
+    wt = wt.transpose(perm).reshape(
+        tuple(spec.j_dims[n] * spec.i_dims[n] for n in range(d)))
+    cores3 = [c.reshape(spec.ranks[n], -1, spec.ranks[n + 1])
+              for n, c in enumerate(cores)]
+    m_l = "abcdef"           # mode letters (d <= 6)
+    r_l = "uvwxyzs"          # rank letters (d+1 <= 7)
+    grads = []
+    for n in range(d):
+        subs = [m_l[:d]]
+        ops: list[jax.Array] = [wt.astype(jnp.float32)]
+        for k in range(d):
+            if k == n:
+                continue
+            subs.append(r_l[k] + m_l[k] + r_l[k + 1])
+            ops.append(cores3[k].astype(jnp.float32))
+        # boundary ranks R_0 == R_d == 1 never appear in the inputs when the
+        # boundary core is the one being differentiated — drop the letter
+        # and reshape instead.
+        out = m_l[n]
+        if n > 0:
+            out = r_l[n] + out
+        if n < d - 1:
+            out = out + r_l[n + 1]
+        g = jnp.einsum(",".join(subs) + "->" + out, *ops)
+        grads.append(g.reshape(cores[n].shape).astype(cores[n].dtype))
+    return grads
+
+
+def ttm_matvec_pe(cores: list[jax.Array], x: jax.Array, spec: TTMSpec,
+                  pe1=pe1_contract, pe2=pe2_contract) -> jax.Array:
+    """Same result as ``ttm_matvec`` but routed through the two canonical PE
+    forms with the exact reshapes of paper Table 3 (rows for Eqs. 8-10).
+
+    Used to validate the Pallas kernels end-to-end: pass kernel impls as
+    pe1/pe2.
+    """
+    d = spec.d
+    batch_shape = x.shape[:-1]
+    b = math.prod(batch_shape) if batch_shape else 1
+    # Eq. (8): PE1 with a=b*I_1..I_{d-1}, b_dim=1, c=I_d, d_out=R_{d-1}*J_d
+    g = cores[d - 1]                                    # (R_{d-1}, J_d, I_d, 1)
+    rdm1, jd, idd = spec.ranks[d - 1], spec.j_dims[d - 1], spec.i_dims[d - 1]
+    a = b * (math.prod(spec.i_dims[:d - 1]) if d > 1 else 1)
+    z = x.reshape(a, 1, idd)
+    gmat = g.reshape(rdm1, jd, idd).transpose(0, 1, 2).reshape(rdm1 * jd, idd)
+    z = pe1(z, gmat.reshape(1, rdm1 * jd, idd))         # (a, R_{d-1}*J_d)
+    acc_j = jd                                           # accumulated trailing J block
+    # Eq. (9) steps: PE2 with c = accumulated J, b_dim = I_n*R_n, d_out = R_{n-1}*J_n
+    for n in range(d - 2, -1, -1):
+        r_in, r_out = spec.ranks[n + 1], spec.ranks[n]
+        i_n, j_n = spec.i_dims[n], spec.j_dims[n]
+        left = math.prod(spec.i_dims[:n]) if n > 0 else 1
+        # z currently: (b*left*i_n, r_in*acc_j) -> (b*left, i_n*r_in, acc_j)
+        z = z.reshape(b * left, i_n, r_in, acc_j).reshape(b * left, i_n * r_in, acc_j)
+        g = cores[n]                                    # (r_out, j_n, i_n, r_in)
+        gmat = g.transpose(2, 3, 0, 1).reshape(i_n * r_in, r_out * j_n)
+        z = pe2(z, gmat)                                # (b*left, r_out*j_n, acc_j)
+        z = z.reshape(b * left, r_out, j_n * acc_j)
+        acc_j *= j_n
+        z = z.reshape(b * left, r_out * acc_j) if n == 0 else \
+            z.reshape(b * (math.prod(spec.i_dims[:n - 1]) if n - 1 > 0 else 1),
+                      spec.i_dims[n - 1], r_out * acc_j).reshape(-1, r_out * acc_j)
+    return z.reshape(batch_shape + (spec.out_dim,))

@@ -1,0 +1,3 @@
+from . import pipeline, synthetic  # noqa: F401
+from .pipeline import Prefetcher, host_shard_info  # noqa: F401
+from .synthetic import fashion_like, lm_batch  # noqa: F401

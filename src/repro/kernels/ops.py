@@ -1,0 +1,121 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+Handles padding to TPU-aligned block multiples (the TPU analogue of the
+paper's "last dimension must be a multiple of 16" constraint), operand
+re-layout for PE1, and interpret-mode selection (interpret=True on CPU where
+the kernel body executes in Python for validation; compiled on real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ttm_pe1, ttm_pe2, ttm_pe3, quantize as qk
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
+    pads = [(0, (-s) % m) for s, m in zip(x.shape, mults)]
+    if any(p[1] for p in pads):
+        return jnp.pad(x, pads)
+    return x
+
+
+def _blk(dim: int, pref: int, floor: int) -> int:
+    """Pick a block size <= pref that is a multiple of `floor`."""
+    if dim >= pref:
+        return pref
+    return max(floor, ((dim + floor - 1) // floor) * floor)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def pe1(z: jax.Array, g: jax.Array, step_log2: float | None = None,
+        bits: int | None = None) -> jax.Array:
+    """PE1 (Eq. 5): Z(a,b,c) x G(b,d,c) -> (a,d), optional fused requantize.
+
+    Re-layout: G(b,d,c) -> (b*c, d); Z(a,b,c) -> (a, b*c). Cores are KB-sized
+    so the one-off G transpose is free relative to the contraction.
+    """
+    a, b, c = z.shape
+    b2, d, c2 = g.shape
+    assert b == b2 and c == c2, (z.shape, g.shape)
+    zf = z.reshape(a, b * c)
+    gf = jnp.transpose(g, (0, 2, 1)).reshape(b * c, d)
+    bm = _blk(a, 128, 8)
+    bn = _blk(d, 128, 128)
+    bk = _blk(b * c, 512, 128)
+    zp = _pad_to(zf, (bm, bk))
+    gp = _pad_to(gf, (bk, bn))
+    out = ttm_pe1.pe1_matmul(zp, gp, bm=bm, bn=bn, bk=bk,
+                             bits=bits,
+                             step_log2=0.0 if step_log2 is None else step_log2,
+                             interpret=_interpret())
+    return out[:a, :d]
+
+
+@jax.jit
+def pe2(z: jax.Array, g: jax.Array) -> jax.Array:
+    """PE2 (Eq. 6): Z(a,b,c) x G(b,d) -> (a,d,c)."""
+    a, b, c = z.shape
+    b2, d = g.shape
+    assert b == b2, (z.shape, g.shape)
+    ba = _blk(a, 8, 8)
+    bd = _blk(d, 128, 128)
+    bc = _blk(c, 128, 128)
+    zp = _pad_to(z, (ba, 1, bc))
+    gp = _pad_to(g, (1, bd))
+    out = ttm_pe2.pe2_batched(zp, gp, ba=ba, bd=bd, bc=bc,
+                              interpret=_interpret())
+    return out[:a, :d, :c]
+
+
+@jax.jit
+def pe3(ybar: jax.Array, x: jax.Array) -> jax.Array:
+    """PE3: Ybar(b,j) x X(b,i) -> What(j,i) (batch-contracted outer product)."""
+    b, j = ybar.shape
+    b2, i = x.shape
+    assert b == b2, (ybar.shape, x.shape)
+    bj = _blk(j, 128, 8)
+    bi = _blk(i, 128, 128)
+    bb = _blk(b, 256, 8)
+    yp = _pad_to(ybar, (bb, bj))
+    xp = _pad_to(x, (bb, bi))
+    out = ttm_pe3.pe3_outer(yp, xp, bj=bj, bi=bi, bb=bb,
+                            interpret=_interpret())
+    return out[:j, :i]
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_fused(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
+    """Fused fake-quant over an arbitrary-shape tensor (reshaped to 2D)."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    bn = 256
+    cols = bn
+    rows = (n + cols - 1) // cols
+    x2 = _pad_to(flat, ((rows * cols),)).reshape(rows, cols)
+    bm = _blk(rows, 256, 8)
+    x2 = _pad_to(x2, (bm, bn))
+    out = qk.quantize(x2, step_log2, bits, bm=bm, bn=bn,
+                      interpret=_interpret())
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+def ttm_matvec_kernels(cores, x, spec):
+    """TTM forward chain routed through the PE kernels (kernel-path analogue
+    of ``core.ttm.ttm_matvec``). Used in tests and kernel benchmarks."""
+    from ..core.ttm import ttm_matvec_pe
+
+    def k_pe1(z, g):
+        return pe1(z, g)
+
+    def k_pe2(z, g):
+        return pe2(z, g)
+
+    return ttm_matvec_pe(cores, x, spec, pe1=k_pe1, pe2=k_pe2)

@@ -1,0 +1,40 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Signatures match the kernel wrappers in ``ops.py`` exactly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def pe1_ref(z: jax.Array, g: jax.Array) -> jax.Array:
+    """PE1 (paper Eq. 5): Z'(a,d) = sum_{b,c} Z(a,b,c) * G(b,d,c)."""
+    return jnp.einsum("abc,bdc->ad", z.astype(jnp.float32),
+                      g.astype(jnp.float32)).astype(z.dtype)
+
+
+def pe2_ref(z: jax.Array, g: jax.Array) -> jax.Array:
+    """PE2 (paper Eq. 6): Z'(a,d,c) = sum_b Z(a,b,c) * G(b,d)."""
+    return jnp.einsum("abc,bd->adc", z.astype(jnp.float32),
+                      g.astype(jnp.float32)).astype(z.dtype)
+
+
+def pe3_ref(ybar: jax.Array, x: jax.Array) -> jax.Array:
+    """PE3: What(j,i) = sum_b Ybar(b,j) * X(b,i) (batched outer product)."""
+    return jnp.einsum("bj,bi->ji", ybar.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(ybar.dtype)
+
+
+def quantize_ref(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
+    """Fused pow-2 quantize-dequantize: clip(round(x/2^k)) * 2^k."""
+    scale = jnp.exp2(step_log2.astype(jnp.float32)).astype(x.dtype)
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    return (jnp.clip(jnp.round(x / scale), lo, hi) * scale).astype(x.dtype)
+
+
+def pe1_quant_ref(z: jax.Array, g: jax.Array, step_log2: jax.Array,
+                  bits: int) -> jax.Array:
+    """PE1 with the FPGA-style requantize-on-writeback epilogue fused."""
+    return quantize_ref(pe1_ref(z, g), step_log2, bits)

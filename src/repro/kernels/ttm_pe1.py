@@ -1,0 +1,79 @@
+"""PE1 Pallas kernel — two-index tensor contraction over the *last* dims of
+both operands (paper Eq. 5):
+
+    Z'(a, d) = sum_{b, c}  Z(a, b, c) * G(b, d, c)
+
+TPU adaptation (DESIGN.md §2): fold (b, c) into one contraction dim K.
+Z(a,b,c) is already contiguous as (a, K); G(b,d,c) is re-laid-out once to
+(K, d) outside the kernel (cores are KB-sized — the FPGA design also pre-lays
+factors in BRAM). The kernel is then a K-accumulating tiled MXU matmul with
+fp32 accumulation in VMEM scratch and an optional fused requantize epilogue
+(the FPGA PE writes quantized results back to DRAM; we mirror that).
+
+Grid: (M/bm, N/bn, K/bk), K iterates fastest (TPU sequential grid) so the
+accumulator lives across the K steps of one (m, n) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pe1_kernel(step_ref, z_ref, g_ref, o_ref, acc_ref, *, n_k: int,
+                bits: int | None):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        z_ref[...], g_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(k == n_k - 1)
+    def _store():
+        acc = acc_ref[...]
+        if bits is not None:
+            scale = jnp.exp2(step_ref[0].astype(jnp.float32))
+            lo = -(2.0 ** (bits - 1))
+            hi = 2.0 ** (bits - 1) - 1.0
+            acc = jnp.clip(jnp.round(acc / scale), lo, hi) * scale
+        o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pe1_matmul(z2d: jax.Array, g2d: jax.Array, *, bm: int = 128, bn: int = 128,
+               bk: int = 512, bits: int | None = None,
+               step_log2: jax.Array | float = 0.0,
+               interpret: bool = True) -> jax.Array:
+    """(M, K) @ (K, N) with fp32 accumulation; inputs must be pre-padded to
+    block multiples (ops.py handles padding/unpadding)."""
+    m, k = z2d.shape
+    k2, n = g2d.shape
+    assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        (z2d.shape, g2d.shape, bm, bn, bk)
+    n_k = k // bk
+    kernel = functools.partial(_pe1_kernel, n_k=n_k, bits=bits)
+    step = jnp.asarray(step_log2, jnp.float32).reshape(1)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk, step: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk, step: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk, step: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), z2d.dtype),
+        interpret=interpret,
+    )(step, z2d, g2d)

@@ -1,0 +1,57 @@
+"""PE2 Pallas kernel — single-index contraction over a *middle* dim
+(paper Eq. 6):
+
+    Z'(a, d, c) = sum_b  Z(a, b, c) * G(b, d)
+
+TPU adaptation: `c` is the minor (lane) dimension of both Z and Z' — the
+analogue of the paper's "last dim must be a multiple of 16" rule becomes
+"c padded to 128 lanes". The contraction dim b is second-minor for Z.
+Per grid step we load Z(a-tile, B, c-tile) and G(B, d-tile) into VMEM and
+issue dot_general contracting b with batch dim c mapped across lanes.
+
+b (= I_n * R_n in the chain) is small in TTM layers, so it is NOT tiled:
+one grid step consumes all of b — this matches the FPGA PE2 which streams
+the full b extent through the MAC array per (c, d) tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pe2_kernel(z_ref, g_ref, o_ref):
+    # z: (ba, b, bc)   g: (b, bd)   ->  o: (ba, bd, bc)
+    z = z_ref[...]
+    g = g_ref[...]
+    # contract b: dot_general(g^T (bd, b), z (ba, b, bc)) with z's b as
+    # contracting — produce (ba, bd, bc) directly via per-a matmuls:
+    # (b, bd)^T @ (b, bc) batched over a.
+    out = jax.lax.dot_general(
+        z, g,
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (ba, bc, bd)
+    o_ref[...] = jnp.transpose(out, (0, 2, 1)).astype(o_ref.dtype)
+
+
+def pe2_batched(z3d: jax.Array, g2d: jax.Array, *, ba: int = 8, bd: int = 128,
+                bc: int = 128, interpret: bool = True) -> jax.Array:
+    """(A, B, C) x (B, D) -> (A, D, C); pre-padded to block multiples."""
+    a, b, c = z3d.shape
+    b2, d = g2d.shape
+    assert b == b2 and a % ba == 0 and c % bc == 0 and d % bd == 0, \
+        (z3d.shape, g2d.shape, ba, bd, bc)
+    return pl.pallas_call(
+        _pe2_kernel,
+        grid=(a // ba, d // bd, c // bc),
+        in_specs=[
+            pl.BlockSpec((ba, b, bc), lambda i, j, kk: (i, 0, kk)),
+            pl.BlockSpec((b, bd), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((ba, bd, bc), lambda i, j, kk: (i, j, kk)),
+        out_shape=jax.ShapeDtypeStruct((a, d, c), z3d.dtype),
+        interpret=interpret,
+    )(z3d, g2d)

@@ -1,0 +1,62 @@
+"""PE3 Pallas kernel — batched outer product accumulating the full-weight
+gradient (paper Appendix A.2):
+
+    What(j, i) = sum_b  Ybar(b, j) * X(b, i)
+
+The FPGA PE3 streams rank-1 outer products straight to DRAM because it is
+DRAM-bandwidth-bound (16 multipliers, write-through, no caching). On TPU a
+batched outer product IS a matmul contracting the batch dim — running it on
+the MXU turns a bandwidth-bound loop into a compute-dense one (DESIGN.md §2
+records this deliberate departure). Grid: (J/bj, I/bi, B/bb) with fp32
+accumulation over the batch tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _pe3_kernel(y_ref, x_ref, o_ref, acc_ref, *, n_b: int):
+    bstep = pl.program_id(2)
+
+    @pl.when(bstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # y: (bb, bj)  x: (bb, bi)  -> contract batch (axis 0 of both)
+    acc_ref[...] += jax.lax.dot_general(
+        y_ref[...], x_ref[...],
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(bstep == n_b - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def pe3_outer(ybar: jax.Array, x: jax.Array, *, bj: int = 128, bi: int = 128,
+              bb: int = 256, interpret: bool = True) -> jax.Array:
+    """(B, J) x (B, I) -> (J, I); pre-padded to block multiples."""
+    b, j = ybar.shape
+    b2, i = x.shape
+    assert b == b2 and j % bj == 0 and i % bi == 0 and b % bb == 0, \
+        (ybar.shape, x.shape, bj, bi, bb)
+    n_b = b // bb
+    kernel = functools.partial(_pe3_kernel, n_b=n_b)
+    return pl.pallas_call(
+        kernel,
+        grid=(j // bj, i // bi, n_b),
+        in_specs=[
+            pl.BlockSpec((bb, bj), lambda jj, ii, bs: (bs, jj)),
+            pl.BlockSpec((bb, bi), lambda jj, ii, bs: (bs, ii)),
+        ],
+        out_specs=pl.BlockSpec((bj, bi), lambda jj, ii, bs: (jj, ii)),
+        out_shape=jax.ShapeDtypeStruct((j, i), ybar.dtype),
+        scratch_shapes=[pltpu.VMEM((bj, bi), jnp.float32)],
+        interpret=interpret,
+    )(ybar, x)

@@ -1,0 +1,2 @@
+from . import mesh, roofline, specs, steps  # noqa: F401
+from .mesh import make_production_mesh  # noqa: F401

@@ -1,0 +1,244 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract roofline terms. No device allocation — all
+inputs are ShapeDtypeStructs.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k [--multi-pod] [--tt] [--out experiments/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse          # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+import traceback         # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from .. import configs as C                         # noqa: E402
+from ..configs.base import SHAPES, TrainConfig      # noqa: E402
+from ..models.lm import build_lm, lm_cache_pspec    # noqa: E402
+from ..sharding import make_plan                    # noqa: E402
+from . import roofline as R                         # noqa: E402
+from . import specs as SP                           # noqa: E402
+from .mesh import make_production_mesh              # noqa: E402
+from .steps import (init_train_state, make_prefill_step, make_serve_step,  # noqa: E402
+                    make_train_step)
+
+
+def _tree_pspec_to_shard(mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda s: isinstance(s, P))
+
+
+def count_params(shapes_tree) -> float:
+    import math
+    return float(sum(
+        math.prod(l.shape) if l.shape else 1
+        for l in jax.tree_util.tree_leaves(shapes_tree)))
+
+
+def active_params(cfg, n_total: float, lm=None) -> float:
+    """Active (per-token) params for MoE archs: replace full expert stack
+    with top_k (+shared) experts."""
+    if cfg.moe.num_experts == 0:
+        return n_total
+    e = cfg.moe.num_experts
+    # expert site params per layer-with-moe: 3 * d_model * d_ff * E
+    from ..models.lm import build_lm as _b
+    lmdef = lm or _b(cfg)
+    moe_layers = 0
+    for i, sub in enumerate(lmdef.period):
+        if sub.ffn_kind == "moe":
+            moe_layers += 1
+    moe_layers *= lmdef.n_periods
+    per_expert = 3 * cfg.d_model * cfg.d_ff
+    inactive = moe_layers * per_expert * (e - cfg.moe.top_k)
+    return n_total - inactive
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+                tt: bool = False, verbose: bool = True) -> dict:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    cfg = C.get_config(arch)
+    if tt:
+        cfg = C.with_tt(cfg)
+    strategy = C.get_strategy(arch)
+    shape = SHAPES[shape_name]
+    tcfg = TrainConfig(
+        opt_state_dtype="int8" if arch == "deepseek-v2-236b" else "float32")
+    plan = make_plan(mesh, strategy, multi_pod=multi_pod,
+                     seq_sharded_cache=(shape_name == "long_500k"))
+    lm = build_lm(cfg)
+    pshapes = SP.params_shapes(lm)
+    pspec = plan.params_pspec_tree(pshapes)
+    pshard = _tree_pspec_to_shard(mesh, pspec)
+    n_params = count_params(pshapes)
+    n_active = active_params(cfg, n_params, lm)
+
+    if shape.kind == "train":
+        step_kind = "train"
+        batch_specs = SP.train_input_specs(cfg, shape)
+        bshard = _tree_pspec_to_shard(
+            mesh, SP.batch_pspec(cfg, batch_specs, plan))
+        state_shapes = jax.eval_shape(
+            partial(init_train_state, tcfg=tcfg), pshapes)
+        # moments: same sharding as params where float; q8 states sharded flat
+        mspecs = _opt_shard(mesh, plan, state_shapes, pspec)
+        state_shard = type(state_shapes)(
+            pshard, mspecs, NamedSharding(mesh, P()))
+        step = make_train_step(lm, plan, tcfg)
+        # out_shardings must match in_shardings for the state or the donated
+        # buffers cannot alias (measured: deepseek-v2 outputs ballooned to
+        # 114 GiB/device without this).
+        jitted = jax.jit(step, in_shardings=(state_shard, bshard),
+                         out_shardings=(state_shard, None),
+                         donate_argnums=(0,))
+        lowered = jitted.lower(state_shapes, batch_specs)
+    elif shape.kind == "prefill":
+        step_kind = "prefill"
+        batch_specs = SP.train_input_specs(cfg, shape)
+        batch_specs.pop("labels")
+        bshard = _tree_pspec_to_shard(
+            mesh, SP.batch_pspec(cfg, batch_specs, plan))
+        step = make_prefill_step(lm, plan)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(pshapes, batch_specs)
+    else:
+        step_kind = "decode"
+        cache_shapes, tok_spec, len_spec = SP.decode_input_specs(
+            cfg, shape, lm, plan)
+        cache_shard = _tree_pspec_to_shard(
+            mesh, lm_cache_pspec(lm, cache_shapes, plan))
+        dp = plan.dp_axes
+        tok_shard = NamedSharding(
+            mesh, P(dp, None) if shape.global_batch >= mesh.shape["data"]
+            else P())
+        step = make_serve_step(lm, plan)
+        jitted = jax.jit(step, in_shardings=(pshard, cache_shard, tok_shard,
+                                             NamedSharding(mesh, P())),
+                         out_shardings=(None, cache_shard),
+                         donate_argnums=(1,))
+        lowered = jitted.lower(pshapes, cache_shapes, tok_spec, len_spec)
+
+    compiled = lowered.compile()
+    mf = R.model_flops_estimate(cfg, shape, n_active, step_kind)
+    roof = R.analyze(arch, shape_name, mesh_name, step_kind, compiled,
+                     mesh.size, mf, n_params)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name, "tt": tt,
+        "strategy": strategy, "step_kind": step_kind,
+        "n_params": n_params, "n_active": n_active,
+        "compile_s": time.time() - t0,
+        **{k: v for k, v in roof.__dict__.items()
+           if k not in ("arch", "shape", "mesh")},
+    }
+    if verbose:
+        ms = result.get("memory_stats", {})
+        print(f"[{arch} × {shape_name} × {mesh_name}{' ×tt' if tt else ''}] "
+              f"{step_kind}: compile {result['compile_s']:.1f}s  "
+              f"flops/dev {roof.hlo_flops:.3e}  bytes/dev {roof.hlo_bytes:.3e}  "
+              f"coll/dev {roof.coll_bytes:.3e}")
+        print(f"  terms (ms): compute {roof.compute_s*1e3:.3f}  "
+              f"memory {roof.memory_s*1e3:.3f}  "
+              f"collective {roof.collective_s*1e3:.3f}  "
+              f"-> bottleneck: {roof.bottleneck}  useful {roof.useful_ratio:.2f}")
+        if ms:
+            print(f"  memory_analysis: { {k: f'{v/2**30:.2f}GiB' for k, v in ms.items()} }")
+    return result
+
+
+def _opt_shard(mesh, plan, state_shapes, pspec):
+    """Sharding for AdamState: moments follow their param spec exactly.
+    The shape-preserving q8 states use the same spec (their last dim is a
+    padded multiple of the param's, so the same partitioning applies; the
+    per-block scale drops the last-axis sharding)."""
+    from ..optim.adam import AdamState
+    pspec_leaves = jax.tree_util.tree_flatten(
+        pspec, is_leaf=lambda s: isinstance(s, P))[0]
+
+    def one(mom):
+        out = []
+        for m, ps in zip(mom, pspec_leaves):
+            if m is None:
+                out.append(None)
+            elif isinstance(m, dict):
+                parts = list(ps) + [None] * (m["q"].ndim - len(ps))
+                q_parts = parts[:m["q"].ndim]
+                s_parts = list(q_parts)
+                # scale's last axis is nb (small) — replicate it
+                if len(s_parts) >= 1:
+                    s_parts[-1] = None
+                # q's last axis is a padded multiple; only shard it if the
+                # padded size still divides
+                if q_parts[-1] is not None:
+                    ax = q_parts[-1]
+                    size = mesh.shape[ax] if isinstance(ax, str) else \
+                        int(np.prod([mesh.shape[a] for a in ax]))
+                    if m["q"].shape[-1] % size != 0:
+                        q_parts[-1] = None
+                out.append({"q": NamedSharding(mesh, P(*q_parts)),
+                            "scale": NamedSharding(mesh, P(*s_parts))})
+            else:
+                out.append(NamedSharding(mesh, ps))
+        return tuple(out)
+
+    return AdamState(NamedSharding(mesh, P()),
+                     one(state_shapes.opt.m), one(state_shapes.opt.v))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--tt", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        cells = list(C.ALL_CELLS)
+    else:
+        shapes = [args.shape] if args.shape else C.valid_cells(args.arch)
+        cells = [(args.arch, s) for s in shapes]
+    meshes = [args.multi_pod]
+    if args.both_meshes:
+        meshes = [False, True]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch, shape in cells:
+        for mp in meshes:
+            tag = f"{arch}_{shape}_{'2x16x16' if mp else '16x16'}" + \
+                ("_tt" if args.tt else "")
+            try:
+                res = dryrun_cell(arch, shape, multi_pod=mp, tt=args.tt)
+                with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                    json.dump(res, f, indent=1, default=str)
+            except Exception as e:
+                failures.append((tag, repr(e)))
+                print(f"[FAIL {tag}] {e}")
+                traceback.print_exc()
+    if failures:
+        print(f"\n{len(failures)} FAILURES:")
+        for t, e in failures:
+            print(" ", t, e)
+        raise SystemExit(1)
+    print("\nall dry-run cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

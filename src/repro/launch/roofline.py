@@ -1,0 +1,156 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / peak_FLOP/s          (per chip)
+    memory term     = HLO_bytes / HBM_bw               (per chip)
+    collective term = collective_bytes / ICI link bw   (per chip)
+
+HLO_FLOPs / HLO_bytes come from ``compiled.cost_analysis()`` (the SPMD
+program is per-device, so no further division). collective_bytes is parsed
+from the optimized HLO: we sum, over every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute, the larger of operand and
+result byte size, doubling all-reduce (ring send+recv) — a deliberate,
+documented convention good for trend tracking, not bit-exact link accounting.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 0.5, "u4": 0.5, "pred": 1,
+}
+
+_SHAPE_RE = re.compile(r"(bf16|f64|f32|f16|f8e4m3fn|f8e5m2|s64|u64|s32|u32|"
+                       r"s16|u16|s8|u8|s4|u4|pred)\[([0-9,]*)\]")
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_bytes(text: str) -> float:
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(text):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-kind collective bytes from optimized (post-SPMD) HLO text."""
+    out = {k: 0.0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.match(r"%?[\w.\-]+ = (.*?) (all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)"
+                     r"(-start|-done)?\(", line)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":
+            continue   # counted at -start
+        result_b = _shape_bytes(m.group(1))
+        # operand shapes appear in the args; take the max of result vs args
+        args = line.split("(", 1)[1]
+        operand_b = _shape_bytes(args)
+        b = max(result_b, operand_b)
+        if kind == "all-reduce":
+            b *= 2.0
+        out[kind] += b
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    step_kind: str
+    hlo_flops: float          # per device
+    hlo_bytes: float          # per device
+    coll_bytes: float         # per device
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float        # 6*N*D (or 6*N_active*D) GLOBAL per step
+    useful_ratio: float       # model_flops / (hlo_flops * n_devices)
+    coll_detail: dict
+    memory_stats: dict
+
+    def row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.compute_s*1e3:.2f} | {self.memory_s*1e3:.2f} | "
+                f"{self.collective_s*1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_ratio:.2f} |")
+
+
+def analyze(arch: str, shape: str, mesh_name: str, step_kind: str,
+            compiled, n_devices: int, model_flops: float,
+            n_model_params: float) -> Roofline:
+    """Three-term roofline from the compiled artifact.
+
+    Primary numbers come from the loop-aware HLO walk (hlo_cost.py) because
+    ``cost_analysis()`` counts while-loop bodies once (verified; see
+    EXPERIMENTS.md). Raw cost_analysis values are preserved in coll_detail
+    ["xla_cost_analysis"] for reference.
+    """
+    from .hlo_cost import hlo_costs
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    t = hlo_costs(hlo)
+    flops = t.flops
+    byts = t.bytes_min
+    coll = dict(t.coll)
+    coll["total"] = t.coll_total
+    coll["bytes_op_granularity"] = t.bytes
+    coll["xla_cost_analysis"] = {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes accessed": float(ca.get("bytes accessed", 0.0)),
+    }
+    coll["loops"] = t.loops[:12]
+    mem_stats = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                mem_stats[k] = int(v)
+    except Exception:
+        pass
+    compute_s = flops / PEAK_FLOPS_BF16
+    memory_s = byts / HBM_BW
+    coll_s = coll["total"] / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    useful = model_flops / max(flops * n_devices, 1.0)
+    return Roofline(arch, shape, mesh_name, step_kind, flops, byts,
+                    coll["total"], compute_s, memory_s, coll_s, bottleneck,
+                    model_flops, useful, coll, mem_stats)
+
+
+def model_flops_estimate(cfg, shape, n_params_active: float,
+                         step_kind: str) -> float:
+    """6·N·D for train, 2·N·D for prefill, 2·N·B for one decode token."""
+    if step_kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if step_kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch   # one decode step

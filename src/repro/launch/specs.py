@@ -1,0 +1,55 @@
+"""``input_specs()`` — ShapeDtypeStruct stand-ins for every model input of
+every (arch × shape) cell: weak-type-correct, shardable, no allocation."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .. import configs as C
+from ..configs.base import ModelConfig, SHAPES, ShapeConfig
+from ..models.lm import LMDef, lm_init_cache
+from ..sharding import ShardPlan
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig, dtype=jnp.bfloat16,
+                      n_patches: int = 2304) -> dict:
+    b, s = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if cfg.frontend == "audio":
+        return {"frames": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype),
+                "labels": jax.ShapeDtypeStruct((b, s), i32)}
+    if cfg.frontend == "vision":
+        st = s - n_patches
+        return {"patches": jax.ShapeDtypeStruct((b, n_patches, cfg.d_model), dtype),
+                "tokens": jax.ShapeDtypeStruct((b, st), i32),
+                "labels": jax.ShapeDtypeStruct((b, st), i32)}
+    return {"tokens": jax.ShapeDtypeStruct((b, s), i32),
+            "labels": jax.ShapeDtypeStruct((b, s), i32)}
+
+
+def batch_pspec(cfg: ModelConfig, specs: dict, plan: ShardPlan) -> dict:
+    out = {}
+    for k, v in specs.items():
+        rest = (None,) * (len(v.shape) - 1)
+        out[k] = P(plan.dp_axes, *rest)
+    return out
+
+
+def decode_input_specs(cfg: ModelConfig, shape: ShapeConfig, lm: LMDef,
+                       plan: ShardPlan, dtype=jnp.bfloat16):
+    """(cache_specs, tokens_spec, cur_len_spec) for one decode step with a
+    KV cache of shape.seq_len."""
+    b, t = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(partial(lm_init_cache, lm, b, t, plan))
+    tokens = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+    return cache, tokens, cur_len
+
+
+def params_shapes(lm: LMDef, key=None):
+    from ..models.lm import init_lm
+    k = jax.random.PRNGKey(0) if key is None else key
+    return jax.eval_shape(partial(init_lm, lm=lm), k)

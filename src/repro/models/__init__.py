@@ -1,0 +1,7 @@
+"""Model zoo: unified LM covering dense / GQA / MLA / MoE / Mamba / RWKV6 /
+hybrid archs, with every weight site TT-factorizable (the paper's technique
+as a first-class layer type)."""
+from . import attention, common, ffn, frontend, lm, moe, ssm  # noqa: F401
+from .lm import (LMDef, build_lm, init_lm, lm_decode_step, lm_forward,
+                 lm_init_cache, lm_lambda_update, lm_param_counts,
+                 lm_prior_loss)  # noqa: F401

@@ -1,0 +1,162 @@
+"""Shared model building blocks.
+
+The central abstraction is the *weight site*: every matmul in every model in
+the zoo goes through ``SiteDef`` + ``init_site`` + ``apply_site``, which
+switch between a dense matrix and the paper's TT-factorized, rank-adaptive,
+optionally-quantized layer purely by config (``TTConfig.apply_to``).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, QuantConfig, TTConfig
+from ..core import quant as Q
+from ..core import tt_layer as TL
+from ..core.ttm import TTMSpec
+
+@dataclass(frozen=True)
+class SiteDef:
+    """Static description of one weight site."""
+    family: str              # one of configs.base.TT_SITES
+    out_dim: int
+    in_dim: int
+    use_tt: bool
+    spec: TTMSpec | None     # set when use_tt
+    use_bias: bool = False
+
+
+def make_site(cfg: ModelConfig, family: str, out_dim: int, in_dim: int,
+              use_bias: bool = False) -> SiteDef:
+    tt = cfg.tt
+    use = (tt.enable and family in tt.apply_to
+           and out_dim * in_dim >= tt.min_elements)
+    spec = None
+    if use:
+        from ..core.ttm import make_spec
+        spec = make_spec(out_dim, in_dim, tt.d, tt.max_rank)
+    return SiteDef(family, out_dim, in_dim, use, spec, use_bias)
+
+
+def init_site(key: jax.Array, site: SiteDef, cfg: ModelConfig) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    if site.use_tt:
+        params, _ = TL.tt_linear_init(
+            key, site.out_dim, site.in_dim, cfg.tt, dtype=dtype,
+            use_bias=site.use_bias,
+            j_dims=site.spec.j_dims, i_dims=site.spec.i_dims,
+            ranks=site.spec.ranks)
+        return params
+    sigma = (2.0 / (site.in_dim + site.out_dim)) ** 0.5
+    p = {"w": (jax.random.normal(key, (site.in_dim, site.out_dim), jnp.float32)
+               * sigma).astype(dtype)}
+    if site.use_bias:
+        p["b"] = jnp.zeros((site.out_dim,), dtype)
+    return p
+
+
+def apply_site(params: dict, x: jax.Array, site: SiteDef,
+               cfg: ModelConfig) -> jax.Array:
+    if site.use_tt:
+        return TL.tt_linear_apply(params, x, site.spec, cfg.tt, cfg.quant)
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y
+
+
+def site_prior_loss(params: dict, site: SiteDef, cfg: ModelConfig) -> jax.Array:
+    """Rank-shrinkage prior g(θ,λ) for this site (0 for dense sites).
+
+    Handles stacked (vmapped-over-layer) params: leading extra axes on the
+    cores are folded into the Frobenius norms, which is exactly the sum of
+    per-layer priors.
+    """
+    if not site.use_tt:
+        return jnp.zeros((), jnp.float32)
+    spec = site.spec
+    if spec.d < 2 or not cfg.tt.rank_adapt:
+        return jnp.zeros((), jnp.float32)
+    from ..core.rank_adapt import LAMBDA_FLOOR
+    total = jnp.zeros((), jnp.float32)
+    for n in range(spec.d - 1):
+        core = params[f"core_{n}"].astype(jnp.float32)
+        lam = jnp.maximum(
+            jax.lax.stop_gradient(params[f"lambda_{n}"]).astype(jnp.float32),
+            LAMBDA_FLOOR)
+        # fold any stacked leading axes into the slice norms
+        core4 = core.reshape((-1,) + core.shape[-4:][-4:]) if core.ndim > 4 else core[None]
+        lam2 = lam.reshape((-1, lam.shape[-1])) if lam.ndim > 1 else lam[None]
+        sq = jnp.sum(jnp.square(core4), axis=(1, 2, 3))        # (stack, R_n)
+        c = 0.5 * (1 + spec.ranks[n] * spec.i_dims[n] * spec.j_dims[n])
+        total = total + jnp.sum(sq / lam2 + c * jnp.log(lam2))
+    return cfg.tt.gamma * total
+
+
+def site_lambda_update(params: dict, site: SiteDef, cfg: ModelConfig) -> dict:
+    """Closed-form Eq.(4) λ update; supports stacked params."""
+    if not site.use_tt or site.spec.d < 2 or not cfg.tt.rank_adapt:
+        return params
+    spec = site.spec
+    new = dict(params)
+    for n in range(spec.d - 1):
+        core = params[f"core_{n}"].astype(jnp.float32)
+        axes = tuple(range(core.ndim - 4, core.ndim - 1))  # (R,J,I) of the last 4
+        sq = jnp.sum(jnp.square(core), axis=axes)          # (stack..., R_n)
+        gs = 1 + spec.ranks[n] * spec.i_dims[n] * spec.j_dims[n]
+        from ..core.rank_adapt import LAMBDA_FLOOR
+        new[f"lambda_{n}"] = jnp.maximum(2.0 / gs * sq, LAMBDA_FLOOR).astype(
+            params[f"lambda_{n}"].dtype)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Norms / rotary / activations
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * scale.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+               eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) / half
+                    * jnp.log(theta))
+    ang = positions.astype(jnp.float32)[..., None] * freqs      # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                            # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def quant_edge_maybe(x: jax.Array, qparams: dict | None, name: str,
+                     cfg: ModelConfig) -> jax.Array:
+    """Insert an (act_bits fwd, grad_bits bwd) quant point if QAT is on."""
+    if not cfg.quant.enable or qparams is None or name not in qparams:
+        return x
+    site = Q.ActQuant(*[qparams[name][k] for k in ("act", "grad", "probe")]) \
+        if isinstance(qparams[name], dict) else qparams[name]
+    return Q.quant_edge(x, site, cfg.quant.act_bits, cfg.quant.grad_bits)

@@ -1,0 +1,39 @@
+"""Dense (Swi)GLU FFN — the standard block for every dense arch in the zoo.
+Each matmul is a weight *site* and can be TT-factorized per config."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import SiteDef, apply_site, init_site, make_site, silu
+
+
+@dataclass(frozen=True)
+class FFNDef:
+    gate: SiteDef
+    up: SiteDef
+    down: SiteDef
+
+
+def make_ffn(cfg: ModelConfig, d_ff: int | None = None) -> FFNDef:
+    f = d_ff or cfg.d_ff
+    return FFNDef(
+        gate=make_site(cfg, "ffn", f, cfg.d_model),
+        up=make_site(cfg, "ffn", f, cfg.d_model),
+        down=make_site(cfg, "ffn", cfg.d_model, f),
+    )
+
+
+def init_ffn(key: jax.Array, d: FFNDef, cfg: ModelConfig) -> dict:
+    kg, ku, kd = jax.random.split(key, 3)
+    return {"gate": init_site(kg, d.gate, cfg), "up": init_site(ku, d.up, cfg),
+            "down": init_site(kd, d.down, cfg)}
+
+
+def ffn_forward(params: dict, x: jax.Array, d: FFNDef, cfg: ModelConfig) -> jax.Array:
+    g = apply_site(params["gate"], x, d.gate, cfg)
+    u = apply_site(params["up"], x, d.up, cfg)
+    return apply_site(params["down"], silu(g) * u, d.down, cfg)

@@ -1,0 +1,29 @@
+"""Modality frontends — STUBS per the assignment: ``input_specs()`` provides
+precomputed frame/patch embeddings; these helpers only document shapes and
+create synthetic embeddings for smoke tests."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+
+
+def audio_frames_spec(cfg: ModelConfig, batch: int, seq: int, dtype):
+    """HuBERT-style CNN feature extractor output: (B, S, d_model)."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), dtype)
+
+
+def vision_patches_spec(cfg: ModelConfig, batch: int, n_patches: int, dtype):
+    """LLaVA-NeXT anyres tiling output after the projector: (B, P, d_model)."""
+    return jax.ShapeDtypeStruct((batch, n_patches, cfg.d_model), dtype)
+
+
+def synth_audio_frames(key, cfg: ModelConfig, batch: int, seq: int, dtype):
+    return (jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32)
+            ).astype(dtype)
+
+
+def synth_vision_patches(key, cfg: ModelConfig, batch: int, n: int, dtype):
+    return (jax.random.normal(key, (batch, n, cfg.d_model), jnp.float32)
+            ).astype(dtype)

@@ -1,0 +1,318 @@
+"""State-space blocks: Mamba-1 selective scan (Jamba's mixer) and RWKV6
+"Finch" (data-dependent decay linear attention).
+
+Both are O(1)-state decoders — these are the archs that run the long_500k
+cell. Projections are weight *sites* (TT-factorizable); the recurrences
+themselves carry per-channel vectors, not matrices, so the paper's technique
+does not apply to them (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig
+from .common import SiteDef, apply_site, init_site, make_site, rms_norm, silu
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 (selective scan)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class MambaDef:
+    in_proj: SiteDef        # D -> 2 * d_inner  (x and z)
+    x_proj: SiteDef         # d_inner -> dt_rank + 2*d_state
+    dt_proj: SiteDef        # dt_rank -> d_inner
+    out_proj: SiteDef       # d_inner -> D
+    d_inner: int
+    d_state: int
+    d_conv: int
+    dt_rank: int
+
+
+def make_mamba(cfg: ModelConfig) -> MambaDef:
+    di = cfg.ssm.expand * cfg.d_model
+    dtr = cfg.ssm.dt_rank or max(1, math.ceil(cfg.d_model / 16))
+    return MambaDef(
+        in_proj=make_site(cfg, "ssm_proj", 2 * di, cfg.d_model),
+        x_proj=make_site(cfg, "ssm_proj", dtr + 2 * cfg.ssm.d_state, di),
+        dt_proj=make_site(cfg, "ssm_proj", di, dtr, use_bias=True),
+        out_proj=make_site(cfg, "ssm_proj", cfg.d_model, di),
+        d_inner=di, d_state=cfg.ssm.d_state, d_conv=cfg.ssm.d_conv, dt_rank=dtr)
+
+
+def init_mamba(key: jax.Array, d: MambaDef, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    dtype = jnp.dtype(cfg.dtype)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, d.d_state + 1, dtype=jnp.float32)[None, :],
+                 (d.d_inner, 1))
+    return {
+        "in_proj": init_site(ks[0], d.in_proj, cfg),
+        "conv_w": (jax.random.normal(ks[1], (d.d_conv, d.d_inner), jnp.float32)
+                   * (1.0 / math.sqrt(d.d_conv))).astype(dtype),
+        "conv_b": jnp.zeros((d.d_inner,), dtype),
+        "x_proj": init_site(ks[2], d.x_proj, cfg),
+        "dt_proj": init_site(ks[3], d.dt_proj, cfg),
+        "A_log": jnp.log(a),
+        "D": jnp.ones((d.d_inner,), jnp.float32),
+        "out_proj": init_site(ks[4], d.out_proj, cfg),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B,S,C), w: (K,C). Returns (y, new_state)
+    where state holds the last K-1 inputs for decode."""
+    k = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)          # (B, S+K-1, C)
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i][None, None, :]
+            for i in range(k))
+    new_state = xp[:, -(k - 1):, :]
+    return y + b[None, None, :], new_state
+
+
+SCAN_CHUNK = 256
+
+
+def _selective_scan(u, dt, a, b_t, c_t, d_skip, h0=None):
+    """u,dt: (B,S,Di); a: (Di,N); b_t,c_t: (B,S,N). Returns (y, h_last).
+
+    Two structural choices that matter at scale (EXPERIMENTS §Perf,
+    jamba row):
+    - exp(dt·A) and dt·B·u are computed INSIDE the step, never materialized
+      as (B,S,Di,N) tensors (N× the activation size, ~4.3 GB/layer on
+      jamba-1.5-large);
+    - the time loop is chunked with a remat boundary per chunk, so the
+      backward saves the state every SCAN_CHUNK steps instead of every
+      step (O(S/chunk) instead of O(S) saved states).
+    """
+    bsz, s, di = u.shape
+    n = a.shape[-1]
+    h_init = jnp.zeros((bsz, di, n), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        u_t, dt_t, bt, ct = inp             # (B,Di),(B,Di),(B,N),(B,N)
+        da_t = jnp.exp(dt_t[..., None] * a[None])           # (B,Di,N)
+        x_t = (dt_t * u_t)[..., None] * bt[:, None, :]
+        h = da_t * h + x_t
+        y = jnp.einsum("bdn,bn->bd", h, ct)
+        return h, y
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk(h, inp):
+        return jax.lax.scan(step, h, inp)
+
+    chunk_len = min(SCAN_CHUNK, s)
+    if s % chunk_len:
+        chunk_len = s  # odd lengths: single chunk
+    nchunks = s // chunk_len
+
+    def to_time(x):                          # (B,S,...) -> (nc, T, B, ...)
+        x = x.swapaxes(0, 1).astype(jnp.float32)
+        return x.reshape((nchunks, chunk_len) + x.shape[1:])
+
+    xs = (to_time(u), to_time(dt), to_time(b_t), to_time(c_t))
+    h_last, ys = jax.lax.scan(chunk, h_init, xs)
+    y = ys.reshape((s, bsz, di)).swapaxes(0, 1)
+    return (y + u.astype(jnp.float32) * d_skip[None, None]).astype(u.dtype), \
+        h_last
+
+
+def mamba_forward(params: dict, x: jax.Array, d: MambaDef, cfg: ModelConfig,
+                  state: dict | None = None):
+    """x: (B,S,D) -> (y, new_state). state = {"conv": (B,K-1,Di), "h": (B,Di,N)}."""
+    b, s, _ = x.shape
+    xz = apply_site(params["in_proj"], x, d.in_proj, cfg)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_state = None if state is None else state["conv"]
+    xi, new_conv = _causal_conv(xi, params["conv_w"].astype(xi.dtype),
+                                params["conv_b"].astype(xi.dtype), conv_state)
+    xi = silu(xi)
+    proj = apply_site(params["x_proj"], xi, d.x_proj, cfg)
+    dt = proj[..., :d.dt_rank]
+    b_t = proj[..., d.dt_rank:d.dt_rank + d.d_state].astype(jnp.float32)
+    c_t = proj[..., d.dt_rank + d.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(apply_site(params["dt_proj"], dt, d.dt_proj, cfg)
+                         .astype(jnp.float32))
+    a = -jnp.exp(params["A_log"])
+    h0 = None if state is None else state["h"]
+    y, h_last = _selective_scan(xi.astype(jnp.float32), dt, a, b_t, c_t,
+                                params["D"], h0)
+    y = y.astype(x.dtype) * silu(z)
+    out = apply_site(params["out_proj"], y, d.out_proj, cfg)
+    return out, {"conv": new_conv.astype(x.dtype), "h": h_last}
+
+
+def mamba_init_state(d: MambaDef, batch: int, dtype) -> dict:
+    return {"conv": jnp.zeros((batch, d.d_conv - 1, d.d_inner), dtype),
+            "h": jnp.zeros((batch, d.d_inner, d.d_state), jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 "Finch"
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RWKV6Def:
+    r: SiteDef
+    k: SiteDef
+    v: SiteDef
+    g: SiteDef
+    o: SiteDef
+    w_lora_a: SiteDef       # D -> lora_dim
+    w_lora_b: SiteDef       # lora_dim -> D
+    ffn_k: SiteDef          # channel-mix
+    ffn_v: SiteDef
+    ffn_r: SiteDef
+    num_heads: int
+    head_dim: int
+
+
+W_LORA_DIM = 64
+
+
+def make_rwkv6(cfg: ModelConfig) -> RWKV6Def:
+    hd = cfg.ssm.head_dim
+    nh = cfg.d_model // hd
+    return RWKV6Def(
+        r=make_site(cfg, "ssm_proj", cfg.d_model, cfg.d_model),
+        k=make_site(cfg, "ssm_proj", cfg.d_model, cfg.d_model),
+        v=make_site(cfg, "ssm_proj", cfg.d_model, cfg.d_model),
+        g=make_site(cfg, "ssm_proj", cfg.d_model, cfg.d_model),
+        o=make_site(cfg, "ssm_proj", cfg.d_model, cfg.d_model),
+        w_lora_a=make_site(cfg, "ssm_proj", W_LORA_DIM, cfg.d_model),
+        w_lora_b=make_site(cfg, "ssm_proj", cfg.d_model, W_LORA_DIM),
+        ffn_k=make_site(cfg, "ffn", cfg.d_ff, cfg.d_model),
+        ffn_v=make_site(cfg, "ffn", cfg.d_model, cfg.d_ff),
+        ffn_r=make_site(cfg, "ffn", cfg.d_model, cfg.d_model),
+        num_heads=nh, head_dim=hd)
+
+
+def init_rwkv6(key: jax.Array, d: RWKV6Def, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 12)
+    dm = cfg.d_model
+    p = {
+        "r": init_site(ks[0], d.r, cfg), "k": init_site(ks[1], d.k, cfg),
+        "v": init_site(ks[2], d.v, cfg), "g": init_site(ks[3], d.g, cfg),
+        "o": init_site(ks[4], d.o, cfg),
+        "w_lora_a": init_site(ks[5], d.w_lora_a, cfg),
+        "w_lora_b": init_site(ks[6], d.w_lora_b, cfg),
+        "w0": jnp.linspace(-6.0, -1.0, dm, dtype=jnp.float32),   # decay base
+        "u": (jax.random.normal(ks[7], (d.num_heads, d.head_dim), jnp.float32)
+              * 0.1),
+        # token-shift mix coefficients (per-channel, per-use)
+        "mu_x": jnp.full((5, dm), 0.5, jnp.float32),
+        "ffn_k": init_site(ks[8], d.ffn_k, cfg),
+        "ffn_v": init_site(ks[9], d.ffn_v, cfg),
+        "ffn_r": init_site(ks[10], d.ffn_r, cfg),
+        "mu_ffn": jnp.full((2, dm), 0.5, jnp.float32),
+        "ln_x_scale": jnp.ones((dm,), jnp.float32),
+    }
+    return p
+
+
+def _token_shift(x: jax.Array, last: jax.Array | None):
+    """shift(x)[t] = x[t-1]; returns (shifted, new_last)."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    shifted = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return shifted, x[:, -1:]
+
+
+def _wkv6_scan(r, k, v, w, u, h0):
+    """RWKV6 recurrence. r,k,v: (B,S,H,Dh); w: (B,S,H,Dh) decay in (0,1);
+    u: (H,Dh) bonus. State S: (B,H,Dh_k,Dh_v).
+      out_t = (S_{t-1} + diag(u·k_t outer) ) applied to r_t
+      S_t   = diag(w_t) S_{t-1} + k_t^T v_t
+
+    Chunked with a remat boundary per chunk: the backward otherwise saves
+    the (B,H,Dh,Dh) state for every timestep (~137 GB on rwkv6-1.6b
+    train_4k; EXPERIMENTS §Perf).
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                         # (B,H,Dh)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, out
+
+    @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk(s, inp):
+        return jax.lax.scan(step, s, inp)
+
+    bsz, s_len = r.shape[0], r.shape[1]
+    chunk_len = min(SCAN_CHUNK, s_len)
+    if s_len % chunk_len:
+        chunk_len = s_len
+    nchunks = s_len // chunk_len
+
+    def to_time(x):
+        x = x.swapaxes(0, 1).astype(jnp.float32)
+        return x.reshape((nchunks, chunk_len) + x.shape[1:])
+
+    h_last, outs = jax.lax.scan(chunk, h0, (to_time(r), to_time(k),
+                                            to_time(v), to_time(w)))
+    outs = outs.reshape((s_len,) + outs.shape[2:])
+    return outs.swapaxes(0, 1), h_last               # (B,S,H,Dh), state
+
+
+def rwkv6_time_mix(params, x, d: RWKV6Def, cfg: ModelConfig,
+                   state: dict | None):
+    b, s, dm = x.shape
+    nh, hd = d.num_heads, d.head_dim
+    last = None if state is None else state["shift"]
+    xs, new_last = _token_shift(x, last)
+    mu = params["mu_x"].astype(x.dtype)              # (5, D)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i][None, None] for i in range(5))
+    r = apply_site(params["r"], xr, d.r, cfg).reshape(b, s, nh, hd)
+    k = apply_site(params["k"], xk, d.k, cfg).reshape(b, s, nh, hd)
+    v = apply_site(params["v"], xv, d.v, cfg).reshape(b, s, nh, hd)
+    g = apply_site(params["g"], xg, d.g, cfg)
+    # data-dependent decay (the Finch contribution)
+    dw = apply_site(params["w_lora_b"],
+                    jnp.tanh(apply_site(params["w_lora_a"], xw, d.w_lora_a, cfg)),
+                    d.w_lora_b, cfg)
+    w = jnp.exp(-jnp.exp(params["w0"][None, None].astype(jnp.float32)
+                         + dw.astype(jnp.float32)))   # (B,S,D) in (0,1)
+    w = w.reshape(b, s, nh, hd)
+    h0 = (jnp.zeros((b, nh, hd, hd), jnp.float32) if state is None
+          else state["wkv"])
+    out, h_last = _wkv6_scan(r, k, v, w, params["u"], h0)
+    out = out.reshape(b, s, dm).astype(x.dtype)
+    out = rms_norm(out, params["ln_x_scale"], cfg.norm_eps)   # group-norm proxy
+    out = out * silu(g)
+    y = apply_site(params["o"], out, d.o, cfg)
+    return y, {"shift": new_last, "wkv": h_last}
+
+
+def rwkv6_channel_mix(params, x, d: RWKV6Def, cfg: ModelConfig,
+                      state: dict | None):
+    last = None if state is None else state["shift_ffn"]
+    xs, new_last = _token_shift(x, last)
+    mu = params["mu_ffn"].astype(x.dtype)
+    xk = x + (xs - x) * mu[0][None, None]
+    xr = x + (xs - x) * mu[1][None, None]
+    k = apply_site(params["ffn_k"], xk, d.ffn_k, cfg)
+    k = jnp.square(jax.nn.relu(k))
+    kv = apply_site(params["ffn_v"], k, d.ffn_v, cfg)
+    r = jax.nn.sigmoid(apply_site(params["ffn_r"], xr, d.ffn_r, cfg))
+    return r * kv, {"shift_ffn": new_last}
+
+
+def rwkv6_init_state(d: RWKV6Def, batch: int, d_model: int, dtype) -> dict:
+    return {
+        "shift": jnp.zeros((batch, 1, d_model), dtype),
+        "wkv": jnp.zeros((batch, d.num_heads, d.head_dim, d.head_dim),
+                         jnp.float32),
+        "shift_ffn": jnp.zeros((batch, 1, d_model), dtype),
+    }

@@ -1,0 +1,3 @@
+from . import adam, binaryconnect, grad_compress, schedule  # noqa: F401
+from .adam import AdamState, adam_update, clip_by_global_norm, init_adam  # noqa: F401
+from .schedule import lr_at  # noqa: F401

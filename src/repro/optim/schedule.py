@@ -1,0 +1,17 @@
+"""LR schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..configs.base import TrainConfig
+
+
+def lr_at(step, cfg: TrainConfig):
+    """Linear warmup then cosine decay to 10%."""
+    step = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    total = max(cfg.total_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / max(total - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * frac))
+    return cfg.learning_rate * warm * (0.1 + 0.9 * cos)

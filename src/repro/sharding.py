@@ -1,0 +1,225 @@
+"""Partition rules: DP / FSDP / TP / EP / SP expressed as one ShardPlan.
+
+Two strategies (selectable per arch config; see DESIGN.md §5):
+
+- ``tp``  — Megatron-style tensor parallelism over the ``model`` axis
+            (heads / ffn / vocab / experts / d_inner), batch over
+            ``(pod, data)``, FSDP of weights over ``data``.
+- ``cp``  — context parallelism: activations sharded over ``model`` on the
+            *sequence* dim; weights fully sharded (ZeRO-3) over
+            ``(data, model)``. Used for archs whose head count does not
+            divide the model axis (yi-34b / llava: 56 heads vs 16).
+
+Decode adds SP: the KV cache / recurrent state is sharded over ``data`` on
+the sequence dim when batch < data axis (long_500k, batch=1).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _div(n: int, mesh: Mesh | None, axis) -> bool:
+    if mesh is None or axis is None:
+        return False
+    if isinstance(axis, tuple):
+        size = int(np.prod([mesh.shape[a] for a in axis]))
+    else:
+        size = mesh.shape[axis]
+    return n % size == 0 and n >= size
+
+
+@dataclass(frozen=True)
+class ShardPlan:
+    mesh: Mesh | None = None
+    strategy: str = "tp"                  # "tp" | "cp"
+    dp_axes: tuple[str, ...] = ("data",)  # ("pod","data") multi-pod
+    seq_sharded_cache: bool = False       # long-context decode SP
+
+    # ---- helpers -----------------------------------------------------
+    def ns(self, spec: P) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, spec)
+
+    def constrain(self, x: jax.Array, spec: P) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, self.ns(spec))
+
+    # ---- activations -------------------------------------------------
+    def hidden(self, x: jax.Array) -> jax.Array:
+        """(B, S, D) residual stream.
+
+        Both strategies shard the sequence dim over ``model`` between blocks
+        (Megatron-LM sequence parallelism): residuals and the remat/scan
+        checkpoints shrink 16×, which is what lets train_4k fit HBM. GSPMD
+        inserts the all-gather before attention/FFN and the reduce-scatter
+        after (same wire volume as the classic TP all-reduce pair)."""
+        if _div(x.shape[1], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, "model", None))
+        return self.constrain(x, P(self.dp_axes, None, None))
+
+    def heads_act(self, x: jax.Array) -> jax.Array:
+        """(B, S, H, Dh) attention interior."""
+        if self.mesh is None:
+            return x
+        if self.strategy == "tp" and _div(x.shape[2], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, None, "model", None))
+        if self.strategy == "cp" and _div(x.shape[1], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, "model", None, None))
+        return self.constrain(x, P(self.dp_axes, None, None, None))
+
+    def kv_full(self, x: jax.Array) -> jax.Array:
+        """KV replicated along seq (cp strategy all-gathers before attention)."""
+        if self.mesh is None:
+            return x
+        if self.strategy == "tp" and _div(x.shape[2], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, None, "model", None))
+        return self.constrain(x, P(self.dp_axes, None, None, None))
+
+    def ffn_act(self, x: jax.Array) -> jax.Array:
+        """(B, S, F)"""
+        if self.mesh is None:
+            return x
+        if self.strategy == "tp" and _div(x.shape[-1], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, None, "model"))
+        if self.strategy == "cp" and _div(x.shape[1], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, "model", None))
+        return self.constrain(x, P(self.dp_axes, None, None))
+
+    def logits(self, x: jax.Array) -> jax.Array:
+        """(B, S, V)"""
+        if self.mesh is None:
+            return x
+        if _div(x.shape[-1], self.mesh, "model"):
+            return self.constrain(x, P(self.dp_axes, None, "model"))
+        return self.constrain(x, P(self.dp_axes, None, None))
+
+    def cache_kv(self, x: jax.Array) -> jax.Array:
+        """(B, T, H, Dh) or (B, T, L) decode caches."""
+        if self.mesh is None:
+            return x
+        if self.seq_sharded_cache and _div(x.shape[1], self.mesh, "data"):
+            rest = (None,) * (x.ndim - 2)
+            return self.constrain(x, P(None, "data", *rest))
+        if x.ndim >= 3 and self.strategy == "tp" \
+                and _div(x.shape[2], self.mesh, "model"):
+            rest = (None,) * (x.ndim - 3)
+            return self.constrain(x, P(self.dp_axes, None, "model", *rest))
+        rest = (None,) * (x.ndim - 1)
+        return self.constrain(x, P(self.dp_axes, *rest))
+
+    # ---- parameters ---------------------------------------------------
+    def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
+        """PartitionSpec for one param leaf, identified by its tree path."""
+        if self.mesh is None:
+            return P()
+        # stacked layer/period/expert leading axes are never sharded except
+        # the explicit expert axis handled below.
+        n_lead = 0
+        parts = path.split("/")
+        name = parts[-1]
+        is_expert = any(p in ("gate", "up", "down") for p in parts) and \
+            "moe" in parts
+        is_stacked = "layers" in parts
+        if len(shape) < 2:
+            return P()
+        # TT cores / lambdas / norms / small vectors: replicated
+        if name.startswith(("core_", "lambda_", "wscale", "scale", "b",
+                            "w0", "u", "mu", "A_log", "D", "conv")):
+            return P()
+
+        dims: list[Any] = [None] * len(shape)
+        body = shape
+        lead = 0
+        if is_stacked:
+            lead += 1
+        if is_expert:
+            # (..., E, in, out): expert axis sharded over model
+            if _div(shape[lead], self.mesh, "model"):
+                dims[lead] = "model"
+            eff = shape[lead + 1:]
+            if len(eff) == 2:
+                if self.strategy == "tp":
+                    if _div(eff[0], self.mesh, "data"):
+                        dims[lead + 1] = "data"
+                else:
+                    if _div(eff[0], self.mesh, "data"):
+                        dims[lead + 1] = "data"
+            return P(*dims)
+        body = shape[lead:]
+        if len(body) != 2:
+            return P(*dims)
+        din, dout = body
+        if self.strategy == "cp":
+            # ZeRO-3: fully shard the larger dim over (data, model)
+            if _div(din, self.mesh, ("data", "model")) and din >= dout:
+                dims[lead] = ("data", "model")
+            elif _div(dout, self.mesh, ("data", "model")):
+                dims[lead + 1] = ("data", "model")
+            elif _div(din, self.mesh, "data"):
+                dims[lead] = "data"
+            return P(*dims)
+        # tp: decide which dim is the "parallel" one by site name
+        out_parallel = any(k in parts for k in
+                           ("q", "kv", "gate", "up", "in_proj", "dt_proj",
+                            "head", "r", "k", "v", "g", "ffn_k", "ffn_r",
+                            "x_proj", "q_up", "k_up", "v_up", "q_down",
+                            "kv_down", "router"))
+        in_parallel = any(k in parts for k in
+                          ("o", "down", "out_proj", "ffn_v"))
+        if "embed" in parts:
+            # (V, D): vocab over model, D over data (fsdp)
+            if _div(din, self.mesh, "model"):
+                dims[lead] = "model"
+            if _div(dout, self.mesh, "data"):
+                dims[lead + 1] = "data"
+            return P(*dims)
+        if out_parallel and _div(dout, self.mesh, "model"):
+            dims[lead + 1] = "model"
+            if _div(din, self.mesh, "data"):
+                dims[lead] = "data"
+        elif in_parallel and _div(din, self.mesh, "model"):
+            dims[lead] = "model"
+            if _div(dout, self.mesh, "data"):
+                dims[lead + 1] = "data"
+        else:
+            # fallback FSDP over data on the larger divisible dim
+            if _div(din, self.mesh, "data") and din >= dout:
+                dims[lead] = "data"
+            elif _div(dout, self.mesh, "data"):
+                dims[lead + 1] = "data"
+        return P(*dims)
+
+    def params_pspec_tree(self, params) -> Any:
+        """PartitionSpec tree matching a params pytree."""
+        flat = jax.tree_util.tree_flatten_with_path(params)[0]
+        specs = {}
+        for path, leaf in flat:
+            key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                           for p in path)
+            specs[key] = self.param_spec(key, leaf.shape)
+        # rebuild tree
+        treedef = jax.tree_util.tree_structure(params)
+        leaves = [specs["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                 for p in path)]
+                  for path, _ in flat]
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def params_sharding_tree(self, params) -> Any:
+        spec_tree = self.params_pspec_tree(params)
+        return jax.tree.map(lambda s: self.ns(s), spec_tree,
+                            is_leaf=lambda s: isinstance(s, P))
+
+
+def make_plan(mesh: Mesh | None, strategy: str = "tp",
+              multi_pod: bool = False,
+              seq_sharded_cache: bool = False) -> ShardPlan:
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return ShardPlan(mesh=mesh, strategy=strategy, dp_axes=dp,
+                     seq_sharded_cache=seq_sharded_cache)

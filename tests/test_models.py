@@ -1,0 +1,117 @@
+"""Per-arch reduced-config smoke tests (assignment requirement): one
+forward/train step on CPU asserting output shapes + no NaNs; decode
+consistency for the decode-capable families."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import TrainConfig
+from repro.launch.steps import init_train_state, make_loss_fn, make_train_step
+from repro.models import (build_lm, init_lm, lm_decode_step, lm_forward,
+                          lm_init_cache)
+from repro.sharding import ShardPlan
+
+PLAN = ShardPlan(mesh=None)
+ARCHS = sorted(C.ARCHS)
+
+
+def _batch(cfg, b=2, s=16):
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    labels = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "audio":
+        return {"frames": jax.random.normal(key, (b, s, cfg.d_model)),
+                "labels": labels}
+    if cfg.frontend == "vision":
+        p = s // 2
+        return {"patches": jax.random.normal(key, (b, p, cfg.d_model)),
+                "tokens": toks[:, :s - p], "labels": labels[:, :s - p]}
+    return {"tokens": toks, "labels": labels}
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes_no_nan(arch):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    batch = _batch(cfg)
+    kwargs = {}
+    if cfg.frontend == "audio":
+        kwargs["embeds"] = batch["frames"]
+    elif cfg.frontend == "vision":
+        kwargs["embeds"] = batch["patches"]
+        kwargs["tokens"] = batch["tokens"]
+    else:
+        kwargs["tokens"] = batch["tokens"]
+    logits, aux, _ = lm_forward(params, lm, PLAN, **kwargs)
+    b = batch["labels"].shape[0]
+    s_total = (batch["frames"].shape[1] if cfg.frontend == "audio" else
+               (batch["patches"].shape[1] + batch["tokens"].shape[1]
+                if cfg.frontend == "vision" else batch["tokens"].shape[1]))
+    assert logits.shape == (b, s_total, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    lm = build_lm(cfg)
+    tcfg = TrainConfig(total_steps=10, warmup_steps=1)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    state = init_train_state(params, tcfg)
+    step = jax.jit(make_train_step(lm, PLAN, tcfg), donate_argnums=(0,))
+    batch = _batch(cfg)
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    state, metrics2 = step(state, batch)
+    assert float(metrics2["ce"]) < float(metrics["ce"]) + 1.0
+
+
+DECODE_ARCHS = [a for a in ARCHS if not C.get_config(a).is_encoder]
+
+
+@pytest.mark.parametrize("arch", DECODE_ARCHS)
+def test_reduced_decode_matches_prefill(arch):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    if cfg.moe.num_experts:
+        # capacity *dropping* is batch-size dependent (GShard semantics):
+        # batched prefill drops tokens a one-token decode step keeps. Use a
+        # drop-free capacity here; drop behaviour is asserted in
+        # test_moe.py::test_capacity_drops_tokens.
+        import dataclasses
+        cfg = cfg.replace(moe=dataclasses.replace(cfg.moe,
+                                                  capacity_factor=64.0))
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    b, s = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    ref_logits, _, _ = lm_forward(params, lm, PLAN, tokens=toks)
+    cache = lm_init_cache(lm, b, s, PLAN)
+    outs = []
+    for t in range(s):
+        lg, cache = lm_decode_step(params, cache, toks[:, t:t + 1],
+                                   jnp.int32(t), lm, PLAN)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    tol = 2e-2 if cfg.moe.num_experts else 2e-4
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(ref_logits),
+                               rtol=tol, atol=tol)
+
+
+def test_tt_enabled_arch_compresses():
+    cfg = C.get_reduced("internlm2-1.8b").replace(dtype="float32",
+                                                  remat="none")
+    cfg = C.with_tt(cfg, d=3, max_rank=8)
+    cfg = cfg.replace(tt=cfg.tt.__class__(**{**cfg.tt.__dict__,
+                                             "min_elements": 1024}))
+    lm = build_lm(cfg)
+    from repro.models import lm_param_counts
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    counts = lm_param_counts(params, lm)
+    assert counts["compression"] > 1.5, counts
+    batch = _batch(cfg)
+    logits, _, _ = lm_forward(params, lm, PLAN, tokens=batch["tokens"])
+    assert not bool(jnp.isnan(logits).any())

@@ -1,0 +1,91 @@
+"""Hypothesis property tests on the system's invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant as Q
+from repro.core import rank_adapt as RA
+from repro.core import ttm
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def spec_strategy(draw):
+    d = draw(st.integers(1, 4))
+    j_dims = tuple(draw(st.integers(1, 6)) for _ in range(d))
+    i_dims = tuple(draw(st.integers(1, 6)) for _ in range(d))
+    r = draw(st.integers(1, 6))
+    return ttm.make_spec(int(np.prod(j_dims)), int(np.prod(i_dims)), d, r,
+                         j_dims=j_dims, i_dims=i_dims)
+
+
+@given(spec_strategy(), st.integers(0, 2 ** 31 - 1))
+def test_ttm_matvec_is_linear_and_matches_dense(spec, seed):
+    cores = ttm.init_cores(jax.random.PRNGKey(seed % 2 ** 31), spec)
+    x = jax.random.normal(jax.random.PRNGKey((seed + 1) % 2 ** 31),
+                          (3, spec.in_dim))
+    w = ttm.ttm_to_dense(cores, spec)
+    y = ttm.ttm_matvec(cores, x, spec)
+    np.testing.assert_allclose(y, x @ w.T, rtol=5e-3, atol=5e-3)
+    # linearity
+    y2 = ttm.ttm_matvec(cores, 2.0 * x, spec)
+    np.testing.assert_allclose(y2, 2.0 * y, rtol=5e-3, atol=5e-3)
+
+
+@given(spec_strategy())
+def test_ttm_param_count_never_exceeds_formula(spec):
+    total = sum(spec.ranks[n] * spec.j_dims[n] * spec.i_dims[n]
+                * spec.ranks[n + 1] for n in range(spec.d))
+    assert spec.num_params == total
+
+
+@given(st.integers(2, 16), st.floats(-8, 8), st.integers(0, 2 ** 31 - 1))
+def test_quant_bounded_error(bits, step_log2, seed):
+    """|Q(x) - x| <= scale/2 inside the representable range."""
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31), (64,)) * 2.0
+    step = jnp.asarray(step_log2, jnp.float32)
+    y = Q.fake_quant(x, step, bits)
+    scale = float(jnp.exp2(step))
+    lo = -(2 ** (bits - 1)) * scale
+    hi = (2 ** (bits - 1) - 1) * scale
+    inside = (np.asarray(x) >= lo) & (np.asarray(x) <= hi)
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err[inside] <= scale / 2 + 1e-6).all()
+
+
+@given(st.integers(0, 2 ** 31 - 1))
+def test_quant_idempotent(seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31), (32,))
+    q1 = Q.quantize_store(x, jnp.asarray(-2.0), 8)
+    q2 = Q.quantize_store(q1, jnp.asarray(-2.0), 8)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+
+
+@given(spec_strategy(), st.integers(0, 2 ** 31 - 1))
+def test_lambda_update_matches_eq4_exactly(spec, seed):
+    if spec.d < 2:
+        return
+    cores = ttm.init_cores(jax.random.PRNGKey(seed % 2 ** 31), spec)
+    lambdas = RA.update_lambdas(cores, spec)
+    for n in range(spec.d - 1):
+        expect = 2.0 / (1 + spec.ranks[n] * spec.i_dims[n] * spec.j_dims[n]) \
+            * np.sum(np.square(np.asarray(cores[n], np.float64)),
+                     axis=(0, 1, 2))
+        np.testing.assert_allclose(np.asarray(lambdas[n]),
+                                   np.maximum(expect, RA.LAMBDA_FLOOR),
+                                   rtol=1e-4)
+
+
+@given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
+def test_scale_manager_monotone_response(n, k, seed):
+    """Scaling the input up never decreases the chosen exponent."""
+    s1 = Q.init_scale(0)
+    s2 = Q.init_scale(0)
+    x = jax.random.normal(jax.random.PRNGKey(seed % 2 ** 31), (max(n, 2),))
+    for _ in range(30):
+        s1 = Q.update_scale(s1, x)
+        s2 = Q.update_scale(s2, x * (2.0 ** k))
+    assert int(s2.log2) >= int(s1.log2)

@@ -1,0 +1,95 @@
+"""Low-precision numerics: pow-2 fake-quant, STE, scale manager (§3.3),
+BinaryConnect semantics (Eq. 3)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant as Q
+
+
+def test_fake_quant_levels():
+    x = jnp.linspace(-3, 3, 201)
+    y = Q.fake_quant(x, jnp.asarray(-2.0), 4)
+    levels = np.unique(np.asarray(y))
+    assert len(levels) <= 16
+    # grid spacing is the scale 2^-2
+    diffs = np.diff(levels)
+    np.testing.assert_allclose(diffs, 0.25, rtol=1e-6)
+
+
+def test_fake_quant_clips_to_range():
+    x = jnp.asarray([-1000.0, 1000.0])
+    y = Q.fake_quant(x, jnp.asarray(0.0), 8)
+    assert float(y[0]) == -128.0 and float(y[1]) == 127.0
+
+
+def test_ste_passes_gradient_inside_range_only():
+    x = jnp.asarray([-0.3, 0.0, 0.4, 50.0, -50.0])
+    g = jax.grad(lambda v: jnp.sum(Q.fake_quant(v, jnp.asarray(-4.0), 4)))(x)
+    # scale 2^-4: representable |x| <= 8*2^-4 = 0.5
+    assert float(g[0]) == 1.0 and float(g[2]) == 1.0
+    assert float(g[3]) == 0.0 and float(g[4]) == 0.0
+
+
+def test_quantize_store_idempotent():
+    x = jax.random.normal(jax.random.PRNGKey(0), (128,))
+    q1 = Q.quantize_store(x, jnp.asarray(-3.0), 8)
+    q2 = Q.quantize_store(q1, jnp.asarray(-3.0), 8)
+    np.testing.assert_allclose(q1, q2)
+
+
+@pytest.mark.parametrize("magnitude", [0.01, 1.0, 37.0, 1000.0])
+def test_scale_manager_converges_to_band(magnitude):
+    """§3.3: mean |x/2^k| driven into [0.1, 0.3]."""
+    s = Q.init_scale(0)
+    for i in range(80):
+        x = jax.random.normal(jax.random.PRNGKey(i), (256,)) * magnitude
+        s = Q.update_scale(s, x)
+    m = float(s.mean_abs)
+    assert 0.05 < m < 0.5, (m, int(s.log2))
+
+
+def test_quant_edge_bwd_quantizes_gradient():
+    site = Q.init_act_quant()
+    x = jax.random.normal(jax.random.PRNGKey(0), (64,))
+
+    def f(x):
+        return jnp.sum(Q.quant_edge(x, site, 8, 16) * 0.3)
+
+    g = jax.grad(f)(x)
+    # gradient values lie on the 16-bit grid with step 2^{0-(16-1)}
+    # (up to f32 representation error of the product grid_value * step)
+    step = 2.0 ** (0 - 15)
+    ratio = np.asarray(g, np.float64) / step
+    np.testing.assert_allclose(ratio, np.round(ratio), rtol=0, atol=1e-2)
+
+
+def test_probe_carries_grad_stat():
+    site = Q.init_act_quant()
+    x = jax.random.normal(jax.random.PRNGKey(1), (64,))
+
+    def f(probe):
+        s = Q.ActQuant(site.act, site.grad, probe)
+        return jnp.sum(Q.quant_edge(x, s, 8, 16) ** 2)
+
+    stat = jax.grad(f)(site.probe)
+    assert float(stat) > 0.0
+
+
+def test_binaryconnect_buffer_semantics():
+    """Eq. (3): gradient of loss(Q(w)) applied to the fp buffer; quantized
+    view changes only when the buffer crosses a grid boundary."""
+    w = jnp.asarray([0.10])         # buffer
+    step = jnp.asarray(-2.0)        # grid 0.25
+    lr = 0.01
+
+    def loss(w):
+        return jnp.sum(Q.fake_quant(w, step, 4) * 1.0)
+
+    for _ in range(5):
+        g = jax.grad(loss)(w)
+        w = w - lr * g
+    # buffer moved even while quantized value stayed on the same level
+    assert float(w[0]) < 0.10
+    assert float(Q.fake_quant(w, step, 4)[0]) == 0.0

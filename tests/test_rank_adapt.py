@@ -1,0 +1,98 @@
+"""Rank adaptation (Eq. 2/4): closed-form λ is the stationary point of g,
+training shrinks ranks, pruning round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import rank_adapt as RA
+from repro.core import ttm
+
+
+def _setup(key=0):
+    spec = ttm.make_spec(24, 30, 3, 8)
+    cores = ttm.init_cores(jax.random.PRNGKey(key), spec)
+    return spec, cores
+
+
+def test_lambda_update_is_stationary_point():
+    """Eq. (4) solves dg/dλ = 0 exactly."""
+    spec, cores = _setup()
+    lambdas = RA.update_lambdas(cores, spec)
+
+    def g_of_lambda(lams):
+        total = 0.0
+        for n in range(spec.d - 1):
+            sq = RA.slice_sqnorms(cores[n])
+            c = 0.5 * RA.group_size(spec, n)
+            total = total + jnp.sum(sq / lams[n] + c * jnp.log(lams[n]))
+        return total
+
+    grads = jax.grad(g_of_lambda)(lambdas)
+    for g, lam in zip(grads, lambdas):
+        np.testing.assert_allclose(g / jnp.abs(lam), 0.0, atol=1e-3)
+
+
+def test_prior_gradient_shrinks_small_slices():
+    spec, cores = _setup()
+    # make slice 0 of core 0 tiny -> its lambda small -> gradient pressure
+    cores[0] = cores[0].at[..., 0].multiply(1e-3)
+    lambdas = RA.update_lambdas(cores, spec)
+
+    def loss(cores):
+        return RA.prior_loss(cores, lambdas, spec)
+
+    g = jax.grad(loss)(cores)
+    # gradient on the small slice is proportionally much larger
+    g0 = jnp.abs(g[0][..., 0]).mean() / jnp.abs(cores[0][..., 0]).mean()
+    g1 = jnp.abs(g[0][..., 1]).mean() / jnp.abs(cores[0][..., 1]).mean()
+    assert float(g0) > float(g1)
+
+
+def test_training_with_prior_reduces_rank():
+    """A true TT-rank-(2,2) target learned with init ranks (4,8) should
+    shrink ranks one-shot during training (paper §3.1)."""
+    spec, cores = _setup()
+    true_spec = ttm.make_spec(24, 30, 3, 2)
+    tc = ttm.init_cores(jax.random.PRNGKey(42), true_spec, scale=1.0)
+    x = jax.random.normal(jax.random.PRNGKey(5), (128, 30))
+    y = ttm.ttm_matvec(tc, x, true_spec)
+    lambdas = RA.init_lambdas(spec)
+
+    def loss(cores, lambdas):
+        pred = ttm.ttm_matvec(cores, x, spec)
+        return (jnp.mean(jnp.square(pred - y))
+                + 0.005 * RA.prior_loss(cores, lambdas, spec))
+
+    lr = 0.03
+    grad_fn = jax.jit(jax.grad(loss))
+    for i in range(1500):
+        g = grad_fn(cores, lambdas)
+        cores = [c - lr * gc for c, gc in zip(cores, g)]
+        lambdas = RA.update_lambdas(cores, spec)
+    eff = RA.effective_ranks(lambdas, threshold=1e-2)
+    assert sum(eff) < sum(spec.ranks[1:-1]), eff     # shrank from (4, 8)
+    pred = ttm.ttm_matvec(cores, x, spec)
+    rel = float(jnp.linalg.norm(pred - y) / jnp.linalg.norm(y))
+    assert rel < 0.5, rel
+    assert all(np.isfinite(np.asarray(l)).all() for l in lambdas)
+
+
+def test_compress_cores_roundtrip():
+    spec, cores = _setup()
+    # zero two slices to make them prunable
+    cores[0] = cores[0].at[..., :3].multiply(1e-6)
+    lambdas = RA.update_lambdas(cores, spec)
+    masked = RA.apply_masks(cores, RA.rank_masks(lambdas, 1e-2))
+    small, new_spec = RA.compress_cores(cores, lambdas, spec, 1e-2)
+    assert new_spec.ranks[1] == spec.ranks[1] - 3
+    x = jax.random.normal(jax.random.PRNGKey(9), (4, 30))
+    np.testing.assert_allclose(ttm.ttm_matvec(masked, x, spec),
+                               ttm.ttm_matvec(small, x, new_spec),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_memory_bits_accounting():
+    spec = ttm.make_spec(512, 896, 4, 16, j_dims=(4, 4, 2, 16),
+                         i_dims=(7, 4, 2, 16))
+    assert RA.tt_memory_bits(spec, 4) == 9664 * 4    # paper layer-1 cores
+    assert RA.tt_memory_bits(spec, 4, eff_ranks=[8, 8, 8]) < 9664 * 4
