@@ -1,57 +1,50 @@
-"""Serving example: batched prefill + autoregressive decode with a KV cache
-on a reduced config of any zoo arch (GQA / MLA / RWKV / hybrid all work —
-the cache type adapts automatically).
+"""Serving example on the continuous-batching engine (repro.serve): a
+stream of variable-length requests is packed into a fixed-slot batch with a
+slot-paged, optionally int8-quantized KV-cache pool.
 
     PYTHONPATH=src python examples/serve_decode.py --arch internlm2-1.8b
+    PYTHONPATH=src python examples/serve_decode.py --arch internlm2-1.8b --quantized
+    PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-236b --temperature 0.8
+
+SSM / hybrid archs (rwkv6, jamba) fall back to the legacy static-batch
+greedy loop (recurrent-state serving is an open roadmap item):
+
     PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
 """
 import argparse
+import json
 import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 import repro.configs as C
-from repro.models import build_lm, init_lm, lm_decode_step, lm_init_cache
-from repro.launch.steps import make_prefill_step
+from repro.launch.steps import make_prefill_step, make_serve_step
+from repro.models import build_lm, init_lm
+from repro.serve import (Engine, EngineConfig, PoolConfig, SamplingParams)
 from repro.sharding import ShardPlan
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="internlm2-1.8b")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen-len", type=int, default=32)
-    args = ap.parse_args()
-
-    cfg = C.get_reduced(args.arch).replace(dtype="float32", remat="none")
-    plan = ShardPlan(mesh=None)
-    lm = build_lm(cfg)
-    params = init_lm(jax.random.PRNGKey(0), lm)
-    b, p, g = args.batch, args.prompt_len, args.gen_len
-
+def static_fallback(cfg, lm, params, plan, args):
+    """Legacy single-batch greedy loop (kept for SSM/hybrid archs)."""
+    b, p, g = args.requests, args.prompt_len, args.gen_len
     prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
                                 cfg.vocab_size)
-    total = p + g
-
-    # prefill: one forward pass builds the cache for every request
     prefill = jax.jit(make_prefill_step(lm, plan))
     t0 = time.time()
-    if cfg.is_encoder:
-        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
     logits, cache = prefill(params, {"tokens": prompt})
-    # pad caches out to the full horizon for attention archs
+
     def pad_seq(a):
         if a.ndim >= 3 and a.shape[2] == p:   # (L, B, S, ...)
             pad = [(0, 0)] * a.ndim
             pad[2] = (0, g)
             return jnp.pad(a, pad)
         return a
+
     cache = jax.tree.map(pad_seq, cache)
     print(f"prefill {b}x{p} in {time.time()-t0:.2f}s")
-
-    step = jax.jit(lambda pr, c, t, l: lm_decode_step(pr, c, t, l, lm, plan))
+    step = jax.jit(make_serve_step(lm, plan))
     tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
     out = [tok]
     t0 = time.time()
@@ -64,6 +57,72 @@ def main():
     print(f"decoded {b}x{g-1} tokens in {dt:.2f}s "
           f"({b*(g-1)/max(dt,1e-9):.0f} tok/s greedy)")
     print("sample:", gen[0, :16].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--quantized", action="store_true",
+                    help="int8 pow-2 KV-cache pool (fp storage otherwise)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--prefill-chunk", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = C.get_reduced(args.arch).replace(dtype="float32", remat="none")
+    if cfg.is_encoder:
+        raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    plan = ShardPlan(mesh=None)
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+
+    attn_only = all(s.mixer_kind in ("attn_gqa", "attn_mla")
+                    for s in lm.period)
+    if not attn_only or cfg.frontend != "none":
+        print(f"{args.arch}: recurrent/frontend arch — using the static "
+              f"fallback loop (engine support is an open roadmap item)")
+        return static_fallback(cfg, lm, params, plan, args)
+
+    horizon = args.prompt_len + args.gen_len
+    pcfg = PoolConfig(
+        num_slots=args.slots, page_size=args.page_size,
+        pages_per_slot=-(-horizon // args.page_size) + 1,
+        quantized=args.quantized)
+    eng = Engine(lm, params,
+                 EngineConfig(pool=pcfg, prefill_chunk=args.prefill_chunk),
+                 plan)
+    sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
+                        top_p=args.top_p)
+
+    rng = np.random.RandomState(1)
+    rids = []
+    for i in range(args.requests):
+        # variable-length prompts: 1/2..1x of --prompt-len
+        plen = int(rng.randint(max(args.prompt_len // 2, 1),
+                               args.prompt_len + 1))
+        prompt = rng.randint(0, cfg.vocab_size, plen).tolist()
+        rids.append(eng.submit(prompt, max_new_tokens=args.gen_len,
+                               sampling=sp))
+
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    s = eng.summary()
+    mode = "int8-paged" if args.quantized else "fp-paged"
+    print(f"served {s['requests_completed']} requests "
+          f"({s['generated_tokens']} tokens) on {args.slots} slots "
+          f"[{mode}] in {dt:.2f}s — {s['tokens_per_s']:.0f} tok/s, "
+          f"ttft p50 {s['ttft_p50_s']*1e3:.0f}ms, "
+          f"cache {s['cache_bytes']/1024:.0f} KiB "
+          f"({s['cache_reduction']:.1f}x vs fp32)")
+    print("sample:", results[rids[0]].tokens[:16])
+    print(json.dumps(s, indent=2))
 
 
 if __name__ == "__main__":

@@ -24,9 +24,14 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:                                  # optional: fall back to uncompressed
+    import zstandard
+except ImportError:                   # pragma: no cover - env dependent
+    zstandard = None
 
 _SEP = "§"
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"     # zstd frame header (RFC 8878)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -49,11 +54,20 @@ def _encode(arrays: dict[str, np.ndarray], meta: dict) -> bytes:
         },
     }
     raw = msgpack.packb(payload, use_bin_type=True)
+    if zstandard is None:
+        return raw
     return zstandard.ZstdCompressor(level=3).compress(raw)
 
 
 def _decode(blob: bytes) -> tuple[dict[str, np.ndarray], dict]:
-    raw = zstandard.ZstdDecompressor().decompress(blob)
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint is zstd-compressed but the zstandard module is "
+                "not installed")
+        raw = zstandard.ZstdDecompressor().decompress(blob)
+    else:
+        raw = blob
     payload = msgpack.unpackb(raw, raw=False, strict_map_key=False)
     arrays = {
         k: np.frombuffer(v["data"], dtype=v["dtype"]).reshape(v["shape"])

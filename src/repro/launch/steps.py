@@ -154,7 +154,14 @@ def make_prefill_step(lm: LMDef, plan: ShardPlan):
 
 
 def make_serve_step(lm: LMDef, plan: ShardPlan):
+    """Decode step. ``cur_len``: scalar shared position, or a per-slot (B,)
+    vector — one compiled step then decodes a batch of requests at
+    *different* positions (the continuous-batching primitive; the decode
+    paths in models/attention.py scatter each row at its own length and
+    mask per-row)."""
+
     def serve_step(params, cache, tokens, cur_len):
-        return lm_decode_step(params, cache, tokens, cur_len, lm, plan)
+        return lm_decode_step(params, cache, tokens,
+                              jnp.asarray(cur_len, jnp.int32), lm, plan)
 
     return serve_step

@@ -200,31 +200,81 @@ def gqa_forward(params: dict, x: jax.Array, d: GQADef, cfg: ModelConfig,
     return apply_site(params["o"], out.reshape(b, s, -1), d.o, cfg)
 
 
-def gqa_decode(params: dict, x: jax.Array, cache: dict, d: GQADef,
-               cfg: ModelConfig, cur_len: jax.Array) -> tuple[jax.Array, dict]:
-    """One-token decode. x: (B,1,D). cache: {"k","v"}: (B,T,Hkv,Dh)."""
-    b = x.shape[0]
-    positions = jnp.full((b, 1), cur_len, jnp.int32)
-    q = apply_site(params["q"], x, d.q, cfg).reshape(b, 1, d.num_heads, d.head_dim)
+def len_positions(cur_len: jax.Array | int, b: int) -> jax.Array:
+    """(B,1) query positions from a scalar or per-slot (B,) ``cur_len``."""
+    cl = jnp.asarray(cur_len, jnp.int32)
+    if cl.ndim == 0:
+        return jnp.full((b, 1), cl, jnp.int32)
+    return cl.reshape(b, 1)
+
+
+def cache_append(cache_arr: jax.Array, new: jax.Array,
+                 cur_len: jax.Array | int) -> jax.Array:
+    """Write one new token at position ``cur_len`` along axis 1.
+
+    cache_arr: (B, T, ...); new: (B, 1, ...). Scalar cur_len keeps the
+    cheap dynamic_update_slice; a per-slot (B,) vector uses a one-hot
+    scatter (each batch row writes at its own position)."""
+    cl = jnp.asarray(cur_len, jnp.int32)
+    new = new.astype(cache_arr.dtype)
+    if cl.ndim == 0:
+        return jax.lax.dynamic_update_slice_in_dim(cache_arr, new, cl, axis=1)
+    b = cache_arr.shape[0]
+    return cache_arr.at[jnp.arange(b), cl].set(new[:, 0])
+
+
+def causal_len_mask(qpos: jax.Array, t: int) -> jax.Array:
+    """(B, S, T) mask: key position visible iff kpos <= qpos."""
+    kpos = jnp.arange(t)
+    return kpos[None, None, :] <= qpos[:, :, None]
+
+
+def gqa_decode_qkv(params: dict, x: jax.Array, d: GQADef, cfg: ModelConfig,
+                   positions: jax.Array):
+    """Project q and the new k/v for decode / chunked prefill.
+
+    x: (B,S,D); positions: (B,S). Returns q (B,S,Hq,Dh), k/v (B,S,Hkv,Dh)."""
+    b, s = x.shape[:2]
+    q = apply_site(params["q"], x, d.q, cfg).reshape(b, s, d.num_heads, d.head_dim)
     kv = apply_site(params["kv"], x, d.kv, cfg).reshape(
-        b, 1, 2, d.num_kv_heads, d.head_dim)
+        b, s, 2, d.num_kv_heads, d.head_dim)
     k_new, v_new = kv[:, :, 0], kv[:, :, 1]
     q = rope(q, positions, cfg.rope_theta)
     k_new = rope(k_new, positions, cfg.rope_theta)
-    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), cur_len, axis=1)
-    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), cur_len, axis=1)
+    return q, k_new, v_new
+
+
+def gqa_attend(q: jax.Array, k: jax.Array, v: jax.Array, d: GQADef,
+               qpos: jax.Array) -> jax.Array:
+    """Decode-style attention over a full cache with per-row lengths.
+
+    q: (B,S,Hq,Dh); k,v: (B,T,Hkv,Dh); qpos: (B,S) absolute query positions
+    (key position kpos attends iff kpos <= qpos). Returns (B,S,real*Dh)."""
+    b, s = q.shape[:2]
     t = k.shape[1]
     scale = 1.0 / math.sqrt(d.head_dim)
     g = d.num_heads // d.num_kv_heads
-    qg = q.reshape(b, 1, d.num_kv_heads, g, d.head_dim)
-    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
-                   preferred_element_type=jnp.float32) * scale
-    kpos = jnp.arange(t)
-    s = jnp.where((kpos <= cur_len)[None, None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    qg = q.reshape(b, s, d.num_kv_heads, g, d.head_dim)
+    sc = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                    preferred_element_type=jnp.float32) * scale
+    mask = causal_len_mask(qpos, t)                       # (B, S, T)
+    sc = jnp.where(mask[:, None, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
     out = jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(v.dtype), v)
-    out = out.reshape(b, 1, d.num_heads, d.head_dim)[:, :, :d.real_heads]
-    out = out.reshape(b, 1, d.real_heads * d.head_dim)
+    out = out.reshape(b, s, d.num_heads, d.head_dim)[:, :, :d.real_heads]
+    return out.reshape(b, s, d.real_heads * d.head_dim)
+
+
+def gqa_decode(params: dict, x: jax.Array, cache: dict, d: GQADef,
+               cfg: ModelConfig, cur_len: jax.Array) -> tuple[jax.Array, dict]:
+    """One-token decode. x: (B,1,D). cache: {"k","v"}: (B,T,Hkv,Dh).
+    ``cur_len``: scalar shared length, or (B,) per-slot lengths."""
+    b = x.shape[0]
+    positions = len_positions(cur_len, b)
+    q, k_new, v_new = gqa_decode_qkv(params, x, d, cfg, positions)
+    k = cache_append(cache["k"], k_new, cur_len)
+    v = cache_append(cache["v"], v_new, cur_len)
+    out = gqa_attend(q, k, v, d, positions)
     y = apply_site(params["o"], out, d.o, cfg)
     return y, {"k": k, "v": v}
 
@@ -331,50 +381,65 @@ def mla_forward(params: dict, x: jax.Array, d: MLADef, cfg: ModelConfig, *,
     return apply_site(params["o"], out, d.o, cfg)
 
 
-def mla_decode(params: dict, x: jax.Array, cache: dict, d: MLADef,
-               cfg: ModelConfig, cur_len: jax.Array) -> tuple[jax.Array, dict]:
-    """Absorbed decode (beyond-paper efficiency, standard MLA practice):
-    scores and values computed in the 512-d latent space; cache holds only
-    (c_kv, k_rope) — the MLA memory win."""
-    b = x.shape[0]
+def _absorb_weight(psite: dict, site, cfg: ModelConfig) -> jax.Array:
+    """Dense (in, out) weight of a site, materializing TT factors if needed."""
+    if "w" in psite:
+        return psite["w"]
+    from ..core import tt_layer as TL
+    from ..core.ttm import ttm_to_dense
+    cores = TL.effective_cores(psite, site.spec, cfg.tt, cfg.quant)
+    return ttm_to_dense(cores, site.spec).T
+
+
+def mla_decode_q(params: dict, x: jax.Array, d: MLADef, cfg: ModelConfig,
+                 positions: jax.Array):
+    """Absorbed decode queries. x: (B,S,D); positions (B,S).
+    Returns q_abs (B,S,H,kv_lora) and q_rope (B,S,H,rope)."""
     m = d.m
-    positions = jnp.full((b, 1), cur_len, jnp.int32)
-    q_nope, q_rope = _mla_q(params, x, d, cfg, positions)     # (B,1,H,*)
-    c_new, kr_new = _mla_kv_latent(params, x, d, cfg, positions)
-    ckv = jax.lax.dynamic_update_slice_in_dim(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), cur_len, axis=1)
-    kr = jax.lax.dynamic_update_slice_in_dim(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), cur_len, axis=1)
-    # absorb k_up into q: q_abs (B,1,H,kv_lora)
-    wk = params["k_up"]["w"] if "w" in params["k_up"] else None
-    if wk is None:
-        # TT-factorized k_up: materialize small (kv_lora, H*nope) once
-        from ..core import tt_layer as TL
-        cores = TL.effective_cores(params["k_up"], d.k_up.spec, cfg.tt, cfg.quant)
-        from ..core.ttm import ttm_to_dense
-        wk = ttm_to_dense(cores, d.k_up.spec).T     # (in=kv_lora, out=H*nope)
+    q_nope, q_rope = _mla_q(params, x, d, cfg, positions)
+    # absorb k_up into q: q_abs = q_nope @ Wk^T per head
+    wk = _absorb_weight(params["k_up"], d.k_up, cfg)  # (kv_lora, H*nope)
     wk = wk.reshape(m.kv_lora_rank, d.num_heads, m.qk_nope_head_dim)
     q_abs = jnp.einsum("bqhd,lhd->bqhl", q_nope, wk.astype(q_nope.dtype))
+    return q_abs, q_rope
+
+
+def mla_attend(params: dict, q_abs: jax.Array, q_rope: jax.Array,
+               ckv: jax.Array, kr: jax.Array, d: MLADef, cfg: ModelConfig,
+               qpos: jax.Array) -> jax.Array:
+    """Latent-space attention. ckv: (B,T,kv_lora); kr: (B,T,rope);
+    qpos: (B,S). Returns (B,S,H*v_head) pre-o-proj."""
+    m = d.m
+    b, s = q_abs.shape[:2]
     t = ckv.shape[1]
     s_nope = jnp.einsum("bqhl,btl->bhqt", q_abs, ckv,
                         preferred_element_type=jnp.float32)
     s_rope = jnp.einsum("bqhd,btd->bhqt", q_rope, kr,
                         preferred_element_type=jnp.float32)
     scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
-    s = (s_nope + s_rope) * scale
-    kpos = jnp.arange(t)
-    s = jnp.where((kpos <= cur_len)[None, None, None, :], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
+    sc = (s_nope + s_rope) * scale
+    mask = causal_len_mask(qpos, t)                       # (B, S, T)
+    sc = jnp.where(mask[:, None], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
     out_lat = jnp.einsum("bhqt,btl->bqhl", p.astype(ckv.dtype), ckv)
-    wv = params["v_up"]["w"] if "w" in params["v_up"] else None
-    if wv is None:
-        from ..core import tt_layer as TL
-        from ..core.ttm import ttm_to_dense
-        cores = TL.effective_cores(params["v_up"], d.v_up.spec, cfg.tt, cfg.quant)
-        wv = ttm_to_dense(cores, d.v_up.spec).T
+    wv = _absorb_weight(params["v_up"], d.v_up, cfg)
     wv = wv.reshape(m.kv_lora_rank, d.num_heads, m.v_head_dim)
     out = jnp.einsum("bqhl,lhd->bqhd", out_lat, wv.astype(out_lat.dtype))
-    out = out.reshape(b, 1, -1)
+    return out.reshape(b, s, -1)
+
+
+def mla_decode(params: dict, x: jax.Array, cache: dict, d: MLADef,
+               cfg: ModelConfig, cur_len: jax.Array) -> tuple[jax.Array, dict]:
+    """Absorbed decode (beyond-paper efficiency, standard MLA practice):
+    scores and values computed in the 512-d latent space; cache holds only
+    (c_kv, k_rope) — the MLA memory win. ``cur_len``: scalar or (B,)."""
+    b = x.shape[0]
+    positions = len_positions(cur_len, b)
+    q_abs, q_rope = mla_decode_q(params, x, d, cfg, positions)
+    c_new, kr_new = _mla_kv_latent(params, x, d, cfg, positions)
+    ckv = cache_append(cache["c_kv"], c_new, cur_len)
+    kr = cache_append(cache["k_rope"], kr_new, cur_len)
+    out = mla_attend(params, q_abs, q_rope, ckv, kr, d, cfg, positions)
     y = apply_site(params["o"], out, d.o, cfg)
     return y, {"c_kv": ckv, "k_rope": kr}
 

@@ -301,6 +301,21 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
     return logits, aux, (caches if return_cache else None)
 
 
+def sub_ffn_decode(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
+                   plan: ShardPlan) -> jax.Array:
+    """Post-mixer FFN/MoE half of a sublayer (shared by the static decode
+    path and repro.serve's paged decode/chunk steps)."""
+    if sub.ffn_kind is None:
+        return x
+    h = rms_norm(x, pp["norm2"]["scale"], cfg.norm_eps)
+    if sub.ffn_kind == "moe":
+        out, _ = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
+                               mesh=plan.mesh, dp_axes=plan.dp_axes)
+    else:
+        out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
+    return x + out
+
+
 def _sub_decode(pp: dict, x: jax.Array, cc: dict, sub: SubDef,
                 cfg: ModelConfig, plan: ShardPlan, cur_len: jax.Array):
     h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
@@ -319,21 +334,15 @@ def _sub_decode(pp: dict, x: jax.Array, cc: dict, sub: SubDef,
         out2, st2 = S.rwkv6_channel_mix(pp["mixer"], h2, sub.mixer, cfg, cc)
         return x + out2, {**st, **st2}
     x = x + out
-    if sub.ffn_kind is not None:
-        h = rms_norm(x, pp["norm2"]["scale"], cfg.norm_eps)
-        if sub.ffn_kind == "moe":
-            out, _ = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
-                                   mesh=plan.mesh, dp_axes=plan.dp_axes)
-        else:
-            out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
-        x = x + out
-    return x, cnew
+    return sub_ffn_decode(pp, x, sub, cfg, plan), cnew
 
 
 def lm_decode_step(params: dict, cache: dict, tokens: jax.Array,
                    cur_len: jax.Array, lm: LMDef, plan: ShardPlan):
     """One-token decode. tokens: (B,1). cache leaves stacked (n_periods, ...).
-    Returns (logits, new_cache)."""
+    ``cur_len``: scalar shared position, or a per-slot (B,) vector — each
+    batch row then appends/attends at its own length (the continuous-
+    batching primitive; see repro.serve). Returns (logits, new_cache)."""
     cfg = lm.cfg
     x = embed_tokens(params, tokens, lm)
     x = plan.constrain(x, jax.sharding.PartitionSpec(plan.dp_axes, None, None))

@@ -1,0 +1,8 @@
+"""repro.serve — continuous-batching inference engine over a slot-paged,
+pow-2 quantized KV-cache pool (the paper's low-precision numerics applied to
+the serving memory bottleneck)."""
+from .engine import Completion, Engine, EngineConfig  # noqa: F401
+from .kv_cache import PoolConfig, init_pool, pool_bytes  # noqa: F401
+from .metrics import ServeMetrics  # noqa: F401
+from .sampling import SamplingParams, sample_tokens  # noqa: F401
+from .scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,340 @@
+"""Continuous-batching inference engine.
+
+One fixed-shape jitted decode step serves the whole request stream: requests
+occupy *slots* of a ``num_slots``-lane batch, each with its own length in a
+per-slot ``cur_len`` vector; EOS / max-length retirement frees a slot (and
+its cache pages) which the scheduler refills on the next iteration, so the
+decode batch never drains to admit new work.  K/V live in the slot-paged,
+optionally int8-quantized pool of ``serve/kv_cache.py`` and are dequantized
+on read inside the per-layer scan.
+
+Numerics contract: in fp (non-quantized) mode the engine's prefill is the
+model's own ``lm_forward`` and its decode runs the exact attend helpers of
+``models/attention.py`` over the same cached values, so continuous-batched
+greedy decode is token-identical to the static single-request reference
+(asserted by tests/test_serve.py). MoE caveat: GShard capacity routing is
+batch-dependent, so prompt padding (``prefill_bucket > 0``) and inactive
+decode slots can displace real tokens from expert capacity — exact parity
+for MoE needs ``prefill_bucket=0`` and a drop-free capacity factor.
+
+Supported archs: every all-attention family in the zoo (dense / MoE, GQA or
+MLA). SSM/hybrid recurrent-state serving and frontend (vision/audio) archs
+are open roadmap items.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import attention as A
+from ..models.common import apply_site, rms_norm
+from ..models.lm import LMDef, embed_tokens, lm_forward, sub_ffn_decode
+from ..sharding import ShardPlan
+from . import kv_cache as KC
+from .kv_cache import PoolConfig
+from .metrics import ServeMetrics
+from .sampling import SamplingParams, sample_tokens
+from .scheduler import Request, Scheduler
+
+
+class Completion(NamedTuple):
+    rid: int
+    prompt: list[int]
+    tokens: list[int]           # generated tokens (first token included)
+
+
+@dataclass(frozen=True)
+class EngineConfig:
+    pool: PoolConfig
+    prefill_chunk: int = 0      # 0: whole-prompt prefill only
+    prefill_bucket: int = 0     # pad prompts to a multiple of this to bound
+                                # compile count (0: exact length — required
+                                # for MoE token-parity: pad tokens would
+                                # compete in GShard capacity routing)
+    seed: int = 0
+
+
+# ---------------------------------------------------------------------------
+# Per-sublayer serve bodies (shared by decode + chunked prefill)
+# ---------------------------------------------------------------------------
+
+def _project(pm: dict, h: jax.Array, sub, cfg, positions: jax.Array):
+    """Queries + new cache entries for one sublayer. h: (B,S,D)."""
+    if sub.mixer_kind == "attn_gqa":
+        q, k_new, v_new = A.gqa_decode_qkv(pm, h, sub.mixer, cfg, positions)
+        return {"q": q}, {"k": k_new, "v": v_new}
+    q_abs, q_rope = A.mla_decode_q(pm, h, sub.mixer, cfg, positions)
+    c_new, kr_new = A._mla_kv_latent(pm, h, sub.mixer, cfg, positions)
+    return ({"q_abs": q_abs, "q_rope": q_rope},
+            {"c_kv": c_new, "k_rope": kr_new})
+
+
+def _attend(pm: dict, qd: dict, kv: dict, sub, cfg,
+            positions: jax.Array) -> jax.Array:
+    """Attention over gathered (dequantized) cache views + output proj."""
+    if sub.mixer_kind == "attn_gqa":
+        out = A.gqa_attend(qd["q"], kv["k"], kv["v"], sub.mixer, positions)
+    else:
+        out = A.mla_attend(pm, qd["q_abs"], qd["q_rope"], kv["c_kv"],
+                           kv["k_rope"], sub.mixer, cfg, positions)
+    return apply_site(pm["o"], out, sub.mixer.o, cfg)
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Continuous-batching serving engine over a paged, quantized KV pool."""
+
+    def __init__(self, lm: LMDef, params, ecfg: EngineConfig,
+                 plan: ShardPlan | None = None, clock=time.monotonic):
+        cfg = lm.cfg
+        if cfg.is_encoder:
+            raise NotImplementedError("encoder-only archs have no decode path")
+        if cfg.frontend != "none":
+            raise NotImplementedError(
+                "frontend (vision/audio) serving is an open roadmap item")
+        for sub in lm.period:
+            KC.kv_feature_shapes(sub)   # raises for SSM/hybrid mixers
+        self.lm = lm
+        self.params = params
+        self.ecfg = ecfg
+        self.pcfg = ecfg.pool
+        self.plan = plan or ShardPlan(mesh=None)
+        self.pool = KC.init_pool(lm, self.pcfg)
+        self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk)
+        self.metrics = ServeMetrics(clock=clock)
+        self.metrics.cache_bytes = KC.pool_bytes(self.pool)
+        self.metrics.cache_bytes_fp32 = 4 * sum(
+            int(np.prod(a.shape))
+            for a in jax.tree_util.tree_leaves(self.pool["data"]))
+        self._key = jax.random.PRNGKey(ecfg.seed)
+        self._nsample = 0
+        self._completions: dict[int, Completion] = {}
+        self._orig_prompt: dict[int, list[int]] = {}
+
+        def prefill(params, tokens, length):
+            """Whole-prompt prefill (the model's own forward): numerically
+            the static-serving reference. jit re-specializes per prompt
+            shape; ``prefill_bucket`` bounds how many shapes occur."""
+            logits, _, cache = lm_forward(params, lm, self.plan,
+                                          tokens=tokens, return_cache=True)
+            return logits[0, length - 1][None], cache
+
+        self._prefill_jit = jax.jit(prefill)
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._write_prefill_jit = jax.jit(KC.write_prefill,
+                                          donate_argnums=(0,),
+                                          static_argnames=("pcfg",))
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._sample_jit = jax.jit(sample_tokens)
+
+    # ---- jitted step bodies -------------------------------------------
+    def _sub_decode(self, pp, x, dsub, ssub, table, lens, active, sub):
+        cfg = self.lm.cfg
+        h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
+        positions = A.len_positions(lens, x.shape[0])
+        qd, newd = _project(pp["mixer"], h, sub, cfg, positions)
+        new_dsub, kv = {}, {}
+        for name, new in newd.items():
+            dl = KC.append_token(dsub[name], ssub[name], new, table, lens,
+                                 active, self.pcfg)
+            new_dsub[name] = dl
+            kv[name] = KC.gather_slots(dl, ssub[name], table, self.pcfg,
+                                       h.dtype)
+        x = x + _attend(pp["mixer"], qd, kv, sub, cfg, positions)
+        return sub_ffn_decode(pp, x, sub, cfg, self.plan), new_dsub
+
+    def _decode_impl(self, params, pool, table, lens, active, tokens):
+        """One batched decode step. tokens: (B,1); lens/active: (B,).
+        Returns (logits (B,V), new pool)."""
+        lm = self.lm
+        x = embed_tokens(params, tokens, lm)
+
+        def body(x, scan_in):
+            pp, dl, sl = scan_in
+            new = {}
+            for i, sub in enumerate(lm.period):
+                x, nd = self._sub_decode(pp[f"sub_{i}"], x, dl[f"sub_{i}"],
+                                         sl[f"sub_{i}"], table, lens, active,
+                                         sub)
+                new[f"sub_{i}"] = nd
+            return x, new
+
+        x, new_data = jax.lax.scan(
+            body, x, (params["layers"], pool["data"], pool["scale_log2"]))
+        x = rms_norm(x, params["final_norm"]["scale"], lm.cfg.norm_eps)
+        logits = apply_site(params["head"], x, lm.head, lm.cfg)
+        return logits[:, 0], {"data": new_data,
+                              "scale_log2": pool["scale_log2"]}
+
+    def _chunk_impl(self, params, pool, tokens, table, slot, start,
+                    valid_len):
+        """Chunked-prefill step for one slot: write the chunk's K/V into the
+        pool, attend over the slot's full history. tokens: (1,S)."""
+        lm = self.lm
+        cfg = lm.cfg
+        s = tokens.shape[1]
+        table_row = table[slot]
+        positions = (start + jnp.arange(s))[None]          # (1,S)
+        x = embed_tokens(params, tokens, lm)
+
+        def body(x, scan_in):
+            pp, dl, sl = scan_in
+            new_d, new_s = {}, {}
+            for i, sub in enumerate(lm.period):
+                spp = pp[f"sub_{i}"]
+                dsub, ssub = dl[f"sub_{i}"], sl[f"sub_{i}"]
+                h = rms_norm(x, spp["norm1"]["scale"], cfg.norm_eps)
+                qd, newd = _project(spp["mixer"], h, sub, cfg, positions)
+                nd, ns, kv = {}, {}, {}
+                for name, new in newd.items():
+                    dlay, slay = KC.write_chunk(
+                        dsub[name], ssub[name], new[0], table_row, start,
+                        valid_len, slot, self.pcfg)
+                    nd[name], ns[name] = dlay, slay
+                    kv[name] = KC.gather_slots(dlay, slay[slot][None],
+                                               table_row[None], self.pcfg,
+                                               h.dtype)
+                x = x + _attend(spp["mixer"], qd, kv, sub, cfg, positions)
+                x = sub_ffn_decode(spp, x, sub, cfg, self.plan)
+                new_d[f"sub_{i}"], new_s[f"sub_{i}"] = nd, ns
+            return x, (new_d, new_s)
+
+        x, (new_data, new_scale) = jax.lax.scan(
+            body, x, (params["layers"], pool["data"], pool["scale_log2"]))
+        x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        logits = apply_site(params["head"], x, lm.head, cfg)
+        last = logits[0, valid_len - 1][None]              # (1,V)
+        return last, {"data": new_data, "scale_log2": new_scale}
+
+    # ---- request lifecycle --------------------------------------------
+    def submit(self, prompt: list[int], max_new_tokens: int = 32,
+               sampling: SamplingParams | None = None,
+               eos_id: int = -1) -> int:
+        req = Request(prompt=list(prompt), max_new_tokens=max_new_tokens,
+                      sampling=sampling or SamplingParams(), eos_id=eos_id)
+        rid = self.sched.submit(req)
+        self._orig_prompt[rid] = list(prompt)
+        self.metrics.request_submitted(rid)
+        return rid
+
+    def _sample(self, logits: jax.Array, slots: list[int]) -> np.ndarray:
+        """Sample one token per row of ``logits`` with the slots' params."""
+        sp = [self.sched.slots[s].req.sampling if self.sched.slots[s]
+              else SamplingParams() for s in slots]
+        key = jax.random.fold_in(self._key, self._nsample)
+        self._nsample += 1
+        toks = self._sample_jit(
+            logits, key,
+            jnp.asarray([p.temperature for p in sp], jnp.float32),
+            jnp.asarray([p.top_k for p in sp], jnp.int32),
+            jnp.asarray([p.top_p for p in sp], jnp.float32))
+        return np.asarray(toks)
+
+    def _do_prefill(self, slot: int, st) -> None:
+        plen = st.prompt_len
+        chunks = self.sched.prefill_chunks(plen)
+        table = jnp.asarray(self.sched.page_table)
+        last_logits = None
+        for ci, (c0, c1) in enumerate(chunks):
+            toks = st.req.prompt[c0:c1]
+            if ci == 0:
+                # whole-chunk model forward (exact reference numerics),
+                # then scatter the returned cache into the pool
+                bucket = self.ecfg.prefill_bucket
+                pad = (-len(toks)) % bucket if bucket > 0 else 0
+                padded = toks + [0] * pad
+                tok_arr = jnp.asarray(padded, jnp.int32)[None]
+                last_logits, cache = self._prefill_jit(
+                    self.params, tok_arr, jnp.int32(len(toks)))
+                self.pool = self._write_prefill_jit(
+                    self.pool, cache, table[slot], jnp.int32(slot),
+                    jnp.int32(len(toks)), pcfg=self.pcfg)
+            else:
+                width = self.ecfg.prefill_chunk
+                padded = toks + [0] * (width - len(toks))
+                tok_arr = jnp.asarray(padded, jnp.int32)[None]
+                last_logits, self.pool = self._chunk_jit(
+                    self.params, self.pool, tok_arr, table, jnp.int32(slot),
+                    jnp.int32(c0), jnp.int32(len(toks)))
+        self.metrics.prefill(plen)
+        tok = int(self._sample(last_logits, [slot])[0])
+        st.generated.append(tok)
+        st.last_token = tok
+        self.metrics.request_first_token(st.req.rid)
+
+    def _finish(self, slot: int) -> None:
+        st = self.sched.retire(slot)
+        rid = st.req.rid
+        full = st.req.prompt + st.generated
+        orig = self._orig_prompt[rid]
+        tokens = full[len(orig):]
+        self._completions[rid] = Completion(rid, orig, tokens)
+        self.metrics.request_finished(rid, len(tokens))
+
+    # ---- engine iteration ---------------------------------------------
+    def step(self) -> None:
+        """One engine iteration: admit + prefill, then one batched decode."""
+        sched = self.sched
+        while True:
+            adm = sched.try_admit()
+            if adm is None:
+                break
+            slot, st = adm
+            self.metrics.request_admitted(st.req.rid, st.prompt_len)
+            self._do_prefill(slot, st)
+            if st.done():
+                self._finish(slot)
+
+        active_slots = [i for i, s in enumerate(sched.slots) if s is not None]
+        if not active_slots:
+            return
+        # lazily map the page each active slot is about to write; preempt
+        # the youngest slot if the pool is exhausted
+        for slot in list(active_slots):
+            if sched.slots[slot] is None:
+                continue
+            while not sched.ensure_page(slot):
+                evicted = sched.preempt_youngest()
+                if evicted is None:
+                    raise RuntimeError(
+                        "KV pool exhausted and nothing to preempt — "
+                        "increase num_pages/pages_per_slot")
+                self.metrics.preempted()
+                if evicted == slot:
+                    break
+        active_slots = [i for i, s in enumerate(sched.slots) if s is not None]
+        if not active_slots:
+            return
+
+        table = jnp.asarray(sched.page_table)
+        lens = jnp.asarray(sched.lens_vector())
+        active = jnp.asarray(sched.active_mask())
+        tokens = jnp.asarray(sched.tokens_vector())
+        logits, self.pool = self._decode_jit(self.params, self.pool, table,
+                                             lens, active, tokens)
+        toks = self._sample(logits, list(range(self.pcfg.num_slots)))
+        for slot in active_slots:
+            st = sched.slots[slot]
+            tok = int(toks[slot])
+            st.generated.append(tok)
+            st.last_token = tok
+            if st.done():
+                self._finish(slot)
+        self.metrics.decode_step(len(active_slots))
+
+    def run(self) -> dict[int, Completion]:
+        """Drive until every submitted request has completed."""
+        while self.sched.has_work():
+            self.step()
+        return dict(self._completions)
+
+    def summary(self) -> dict:
+        return self.metrics.summary()

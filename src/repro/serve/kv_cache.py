@@ -1,0 +1,236 @@
+"""Slot-paged KV-cache pool with pow-2 symmetric fixed-point storage.
+
+The serving cache is a pool of fixed-size *pages* shared by all request
+slots.  A slot owns an ordered list of pages (its row of the page table);
+token position ``t`` of a slot lives at ``(page_table[slot, t // page_size],
+t % page_size)``.  Pages are allocated lazily as a request's length crosses
+page boundaries and returned to the free list when the request retires, so
+pool memory scales with *live tokens*, not ``num_slots * max_len``.
+
+Quantization (the paper's §3.2 numerics applied to serving): K/V entries are
+stored as ``int8`` codes on a power-of-2 grid, ``x ≈ q * 2^scale_log2`` with
+``q ∈ [-2^{b-1}, 2^{b-1}-1]``, one ``scale_log2`` per (layer, slot, tensor)
+chosen from the prompt's K/V range at prefill and reused for decode appends
+(decode K/V share the prompt's amplitude).  Dequantization happens on read,
+immediately before the attention einsums — the resident cache is 1 byte per
+element instead of 4, the ≥3.5× serving-memory version of the paper's 292×
+training-memory result.
+
+Everything here is jit-safe: writes are batched scatters via ``.at[]``,
+reads are page-table gathers.  Inactive slots write to a reserved *trash
+page* (index ``num_pages``) so one compiled step serves any live/dead slot
+mix.  Host-side page accounting lives in ``serve/scheduler.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..core.quant import qrange
+
+
+@dataclass(frozen=True)
+class PoolConfig:
+    """Geometry + numerics of the paged pool."""
+    num_slots: int              # max concurrent requests (decode batch)
+    page_size: int = 16         # tokens per page
+    pages_per_slot: int = 8     # max pages one slot may hold
+    num_pages: int = 0          # physical pages shared by all slots
+                                # (0 => num_slots * pages_per_slot, no sharing)
+    quantized: bool = False     # int8 pow-2 storage vs model-dtype storage
+    bits: int = 8
+
+    @property
+    def max_len(self) -> int:
+        return self.page_size * self.pages_per_slot
+
+    @property
+    def total_pages(self) -> int:
+        return self.num_pages or self.num_slots * self.pages_per_slot
+
+    @property
+    def trash_page(self) -> int:
+        """Reserved page absorbing writes from inactive/padded positions."""
+        return self.total_pages
+
+    def pages_for(self, n_tokens: int) -> int:
+        return -(-max(n_tokens, 1) // self.page_size)
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+
+def kv_feature_shapes(sub) -> dict[str, tuple[int, ...]]:
+    """Per-token trailing feature shape of each cached tensor of a sublayer
+    (the same layouts ``models/attention.py`` caches)."""
+    if sub.mixer_kind == "attn_gqa":
+        d = sub.mixer
+        return {"k": (d.num_kv_heads, d.head_dim),
+                "v": (d.num_kv_heads, d.head_dim)}
+    if sub.mixer_kind == "attn_mla":
+        m = sub.mixer.m
+        return {"c_kv": (m.kv_lora_rank,), "k_rope": (m.qk_rope_head_dim,)}
+    raise ValueError(
+        f"paged serving supports attention mixers only, got "
+        f"{sub.mixer_kind!r} (SSM/hybrid serving is an open roadmap item)")
+
+
+def init_pool(lm, pcfg: PoolConfig) -> dict:
+    """Allocate the device half of the pool for every sublayer of ``lm``.
+
+    Returns {"data": {sub_i: {name: (L, P+1, page, *feat) int8|dtype}},
+             "scale_log2": {sub_i: {name: (L, num_slots) f32}}}.
+    ``scale_log2`` is carried (zero) in fp mode too so the step function's
+    pytree structure is independent of the numerics mode.
+    """
+    fp_dtype = jnp.dtype(lm.cfg.dtype)
+    store = jnp.int8 if pcfg.quantized else fp_dtype
+    L = lm.n_periods
+    data: dict = {}
+    scale: dict = {}
+    for i, sub in enumerate(lm.period):
+        feats = kv_feature_shapes(sub)
+        data[f"sub_{i}"] = {
+            name: jnp.zeros((L, pcfg.total_pages + 1, pcfg.page_size) + f,
+                            store)
+            for name, f in feats.items()}
+        scale[f"sub_{i}"] = {
+            name: jnp.zeros((L, pcfg.num_slots), jnp.float32)
+            for name in feats}
+    return {"data": data, "scale_log2": scale}
+
+
+def pool_bytes(pool: dict) -> int:
+    """Resident bytes of the cache pool (storage + scales)."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(pool))
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize (pow-2 symmetric fixed point, core/quant.py scheme)
+# ---------------------------------------------------------------------------
+
+def choose_scale_log2(x: jax.Array, valid: jax.Array, bits: int) -> jax.Array:
+    """Smallest pow-2 step covering max|x| over valid rows.
+
+    x: (L, S, *feat); valid: (S,) bool. Returns (L,) f32 integer-valued."""
+    mask = valid.reshape((1, -1) + (1,) * (x.ndim - 2))
+    maxabs = jnp.max(jnp.abs(x.astype(jnp.float32)) * mask,
+                     axis=tuple(range(1, x.ndim)))
+    _, hi = qrange(bits)
+    return jnp.ceil(jnp.log2(jnp.maximum(maxabs, 1e-8) / hi))
+
+
+def quantize(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
+    """fp -> int8 codes; scale_log2 broadcast against x's leading dims."""
+    lo, hi = qrange(bits)
+    step = jnp.exp2(scale_log2).reshape(
+        scale_log2.shape + (1,) * (x.ndim - scale_log2.ndim))
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / step), lo, hi)
+    return q.astype(jnp.int8)
+
+
+def dequantize(q: jax.Array, scale_log2: jax.Array, dtype) -> jax.Array:
+    step = jnp.exp2(scale_log2).reshape(
+        scale_log2.shape + (1,) * (q.ndim - scale_log2.ndim))
+    return (q.astype(jnp.float32) * step).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer jit primitives (used inside the engine's layer scan)
+# ---------------------------------------------------------------------------
+
+def gather_slots(data_l: jax.Array, scale_l: jax.Array, table: jax.Array,
+                 pcfg: PoolConfig, dtype) -> jax.Array:
+    """Materialize every slot's cache view for one layer.
+
+    data_l: (P+1, page, *feat); scale_l: (num_slots,); table: (B, pages_per_
+    slot). Returns (B, T=max_len, *feat) in ``dtype`` (dequantized on read).
+    """
+    g = data_l[table]                                    # (B, pp, page, *f)
+    b = table.shape[0]
+    g = g.reshape((b, pcfg.max_len) + g.shape[3:])
+    if pcfg.quantized:
+        return dequantize(g, scale_l.reshape((b,) + (1,) * (g.ndim - 1)),
+                          dtype)
+    return g.astype(dtype)
+
+
+def append_token(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
+                 table: jax.Array, lens: jax.Array, active: jax.Array,
+                 pcfg: PoolConfig) -> jax.Array:
+    """Scatter one new token per slot at its own length.
+
+    new: (B, 1, *feat) fp; inactive slots are redirected to the trash page.
+    Decode appends reuse the slot's prefill scale (clipping into its range).
+    """
+    b = new.shape[0]
+    page_idx = lens // pcfg.page_size
+    pages = jnp.take_along_axis(table, page_idx[:, None], axis=1)[:, 0]
+    pages = jnp.where(active, pages, pcfg.trash_page)
+    offs = lens % pcfg.page_size
+    vals = new[:, 0]
+    if pcfg.quantized:
+        vals = quantize(vals, scale_l.reshape((b,) + (1,) * (vals.ndim - 1)),
+                        pcfg.bits)
+    else:
+        vals = vals.astype(data_l.dtype)
+    return data_l.at[pages, offs].set(vals)
+
+
+def write_chunk(data_l: jax.Array, scale_l: jax.Array, vals: jax.Array,
+                table_row: jax.Array, start: jax.Array, valid_len: jax.Array,
+                slot: jax.Array, pcfg: PoolConfig
+                ) -> tuple[jax.Array, jax.Array]:
+    """Write a prefill chunk of one slot into one layer's pool.
+
+    vals: (S, *feat) fp (positions start..start+S-1; only the first
+    ``valid_len`` rows are real). The slot's scale must already be set (the
+    first prefill chunk always goes through ``write_prefill``, which derives
+    it); this chunk clips into that range. Returns (data_l, scale_l)."""
+    s = vals.shape[0]
+    pos = start + jnp.arange(s)
+    valid = jnp.arange(s) < valid_len
+    pages = table_row[pos // pcfg.page_size]
+    pages = jnp.where(valid, pages, pcfg.trash_page)
+    offs = pos % pcfg.page_size
+    if pcfg.quantized:
+        vals = quantize(vals, scale_l[slot][None], pcfg.bits)
+    else:
+        vals = vals.astype(data_l.dtype)
+    return data_l.at[pages, offs].set(vals), scale_l
+
+
+def write_prefill(pool: dict, cache: dict, table_row: jax.Array,
+                  slot: jax.Array, length: jax.Array, pcfg: PoolConfig
+                  ) -> dict:
+    """Scatter a whole-prompt prefill cache (from ``lm_forward``) into the
+    pool for one slot, all layers at once.
+
+    cache leaves: (L, 1, S, *feat) — the stacked per-layer caches the model
+    returns. Rows past ``length`` (bucket padding) go to the trash page."""
+    data, scale = dict(pool["data"]), dict(pool["scale_log2"])
+    sample = next(iter(next(iter(cache.values())).values()))
+    s = sample.shape[2]
+    pos = jnp.arange(s)
+    valid = pos < length
+    pages = jnp.where(valid, table_row[pos // pcfg.page_size],
+                      pcfg.trash_page)
+    offs = pos % pcfg.page_size
+    for key, kinds in cache.items():
+        new_d = dict(data[key])
+        new_s = dict(scale[key])
+        for name, arr in kinds.items():
+            vals = arr[:, 0]                             # (L, S, *feat)
+            if pcfg.quantized:
+                step = choose_scale_log2(vals, valid, pcfg.bits)   # (L,)
+                new_s[name] = new_s[name].at[:, slot].set(step)
+                vals = quantize(vals, step[:, None], pcfg.bits)
+            else:
+                vals = vals.astype(new_d[name].dtype)
+            new_d[name] = new_d[name].at[:, pages, offs].set(vals)
+        data[key] = new_d
+        scale[key] = new_s
+    return {"data": data, "scale_log2": scale}

@@ -1,0 +1,102 @@
+"""Serving telemetry: throughput, time-to-first-token, request latency
+percentiles, and cache-pool byte accounting.
+
+The engine calls the ``request_*`` hooks as requests move through their
+lifecycle and ``decode_step`` once per batched step; ``summary()`` folds
+everything into a JSON-friendly dict (the schema the throughput benchmark
+emits). The clock is injectable for deterministic tests.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class _ReqTiming:
+    submitted: float
+    admitted: float | None = None
+    first_token: float | None = None
+    finished: float | None = None
+    prompt_len: int = 0
+    gen_len: int = 0
+
+
+def _pct(xs: list[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
+
+
+@dataclass
+class ServeMetrics:
+    clock: Callable[[], float] = time.monotonic
+    _req: dict[int, _ReqTiming] = field(default_factory=dict)
+    _t0: float | None = None
+    _t_end: float | None = None
+    decode_steps: int = 0
+    decode_tokens: int = 0      # tokens produced by batched decode steps
+    prefill_tokens: int = 0
+    preemptions: int = 0
+    cache_bytes: int = 0        # resident pool bytes (set by the engine)
+    cache_bytes_fp32: int = 0   # what the same pool would cost unquantized
+
+    # ---- lifecycle hooks ----------------------------------------------
+    def request_submitted(self, rid: int) -> None:
+        self._req[rid] = _ReqTiming(submitted=self.clock())
+
+    def request_admitted(self, rid: int, prompt_len: int) -> None:
+        t = self._req[rid]
+        # a re-admitted (preempted) request keeps its original timings
+        if t.admitted is None:
+            t.admitted = self.clock()
+            t.prompt_len = prompt_len
+        if self._t0 is None:
+            self._t0 = self.clock()
+
+    def request_first_token(self, rid: int) -> None:
+        t = self._req[rid]
+        if t.first_token is None:
+            t.first_token = self.clock()
+
+    def request_finished(self, rid: int, gen_len: int) -> None:
+        t = self._req[rid]
+        t.finished = self.clock()
+        t.gen_len = gen_len
+        self._t_end = t.finished
+
+    def decode_step(self, n_active: int) -> None:
+        self.decode_steps += 1
+        self.decode_tokens += n_active
+
+    def prefill(self, n_tokens: int) -> None:
+        self.prefill_tokens += n_tokens
+
+    def preempted(self) -> None:
+        self.preemptions += 1
+
+    # ---- summary -------------------------------------------------------
+    def summary(self) -> dict:
+        done = [t for t in self._req.values() if t.finished is not None]
+        ttft = [t.first_token - t.submitted for t in done
+                if t.first_token is not None]
+        lat = [t.finished - t.submitted for t in done]
+        wall = ((self._t_end or self.clock()) - self._t0) \
+            if self._t0 is not None else 0.0
+        total_gen = sum(t.gen_len for t in done)
+        return {
+            "requests_completed": len(done),
+            "generated_tokens": total_gen,
+            "prefill_tokens": self.prefill_tokens,
+            "decode_steps": self.decode_steps,
+            "preemptions": self.preemptions,
+            "wall_s": wall,
+            "tokens_per_s": total_gen / wall if wall > 0 else 0.0,
+            "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+            "latency_p50_s": _pct(lat, 50), "latency_p95_s": _pct(lat, 95),
+            "cache_bytes": self.cache_bytes,
+            "cache_bytes_fp32": self.cache_bytes_fp32,
+            "cache_reduction": (self.cache_bytes_fp32 / self.cache_bytes
+                                if self.cache_bytes else 0.0),
+        }

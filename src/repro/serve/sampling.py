@@ -1,0 +1,57 @@
+"""jit-safe per-slot token sampling: greedy / temperature / top-k / top-p.
+
+One compiled function serves every slot mix: the sampling knobs are *data*
+(per-slot vectors), not static configuration, so requests with different
+temperatures/top-k/top-p batch into the same decode step. ``temperature <=
+0`` selects greedy argmax for that slot (the deterministic serving mode the
+fp32-parity tests rely on).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SamplingParams(NamedTuple):
+    """Per-request sampling knobs (host-side; vectorized by the engine)."""
+    temperature: float = 0.0    # <= 0: greedy
+    top_k: int = 0              # 0: disabled
+    top_p: float = 1.0          # 1.0: disabled
+
+
+def _sample_row(logits: jax.Array, key: jax.Array, temp: jax.Array,
+                top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Sample one token from one slot's logits (V,)."""
+    v = logits.shape[-1]
+    greedy = temp <= 0.0
+    scaled = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
+    desc = jnp.sort(scaled)[::-1]
+    # top-k: drop logits below the k-th largest (k=0 disables)
+    kth = desc[jnp.clip(top_k - 1, 0, v - 1)]
+    masked = jnp.where((top_k > 0) & (scaled < kth), -jnp.inf, scaled)
+    # top-p (nucleus): keep the smallest prefix of the sorted distribution
+    # whose mass reaches p; implemented as a logit threshold so the mask
+    # applies in unsorted order. The top logit is always kept.
+    probs = jax.nn.softmax(desc)
+    cum = jnp.cumsum(probs)
+    keep = cum - probs < top_p
+    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf))
+    masked = jnp.where(masked < cutoff, -jnp.inf, masked)
+    sampled = jax.random.categorical(key, masked)
+    return jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Vectorized sampling. logits: (B, V); per-slot knob vectors (B,).
+
+    Each slot gets an independent stream derived from ``key`` by fold-in, so
+    slot outcomes don't depend on which other requests share the batch.
+    """
+    b = logits.shape[0]
+    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(b))
+    return jax.vmap(_sample_row)(
+        logits, keys, temperature.astype(jnp.float32),
+        top_k.astype(jnp.int32), top_p.astype(jnp.float32)).astype(jnp.int32)
