@@ -1,0 +1,109 @@
+"""Quantization-codec micro-benchmark: spec × backend × op sweep.
+
+Times ``encode`` / ``decode`` / ``fake_quant`` for the policy's site specs
+on both codec backends (reference jnp vs Pallas) and records achieved
+GB/s plus the compression ratio of the quantized representation. Emits one
+JSON document (the bench-trajectory format, ``BENCH_quant_codec.json``)
+seeding the perf trajectory for the codec hot paths (KV-cache writes,
+optimizer-state re-encode every step, DP wire).
+
+    PYTHONPATH=src python benchmarks/quant_codec.py
+    PYTHONPATH=src python benchmarks/quant_codec.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, iters: int, warmup: int = 2) -> float:
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_cell(site: str, spec, backend: str, n: int, iters: int) -> dict:
+    from repro import numerics as N
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (n,)) * 3
+    scale = jnp.asarray(-3.0)
+
+    enc = jax.jit(lambda v: N.encode(v, spec, scale, backend=backend))
+    qt = jax.block_until_ready(enc(x))
+    dec = jax.jit(lambda q: N.decode(q, jnp.float32, backend=backend))
+    fq = jax.jit(lambda v: N.fake_quant(v, spec, scale, backend=backend))
+
+    t_enc = _time(enc, x, iters=iters)
+    t_dec = _time(dec, qt, iters=iters)
+    t_fq = _time(fq, x, iters=iters)
+    return {
+        "site": site,
+        "kind": spec.kind,
+        "bits": spec.bits,
+        "block": spec.block,
+        "backend": backend,
+        "elements": n,
+        "encode_s": t_enc,
+        "decode_s": t_dec,
+        "fake_quant_s": t_fq,
+        "encode_gbps": x.nbytes / t_enc / 1e9,
+        "decode_gbps": x.nbytes / t_dec / 1e9,
+        "fake_quant_gbps": x.nbytes / t_fq / 1e9,
+        "compression_x": x.nbytes / qt.nbytes(),
+    }
+
+
+def run_sweep(n: int, iters: int) -> dict:
+    from repro import numerics as N
+
+    pol = N.NumericsPolicy(enable=True)
+    cells = []
+    for site in N.SITES:
+        spec = pol.spec_for(site)
+        for backend in N.BACKENDS:
+            cells.append(bench_cell(site, spec, backend, n, iters))
+    return {
+        "bench": "quant_codec",
+        "device": str(jax.devices()[0]),
+        "jax_backend": jax.default_backend(),
+        "elements": n,
+        "iters": iters,
+        "cells": cells,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--elements", type=int, default=1 << 22)
+    ap.add_argument("--iters", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sweep for CI (correct shapes, trivial sizes)")
+    ap.add_argument("--out", default="BENCH_quant_codec.json")
+    args = ap.parse_args()
+
+    n = 1 << 12 if args.smoke else args.elements
+    iters = 2 if args.smoke else args.iters
+    doc = run_sweep(n, iters)
+    text = json.dumps(doc, indent=2)
+    if args.out == "-":
+        sys.stdout.write(text + "\n")
+    else:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        slowest = max(doc["cells"], key=lambda c: c["encode_s"])
+        print(f"[quant_codec] {len(doc['cells'])} cells -> {args.out} "
+              f"(slowest encode: {slowest['site']}/{slowest['backend']} "
+              f"{slowest['encode_s']*1e3:.2f} ms)")
+
+
+if __name__ == "__main__":
+    main()

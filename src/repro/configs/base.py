@@ -33,7 +33,13 @@ class TTConfig:
 
 @dataclass(frozen=True)
 class QuantConfig:
-    """Low-precision training config (paper §3.2-3.3)."""
+    """Low-precision training config (paper §3.2-3.3).
+
+    This is the config-surface *constructor* for the unified quantization
+    policy: ``QuantConfig.policy()`` lowers the paper-era knob set onto a
+    ``repro.numerics.NumericsPolicy`` (named sites -> QuantSpec), which is
+    what the codecs and step factories actually consume.
+    """
     enable: bool = False
     weight_bits: int = 4            # TT factors
     act_bits: int = 8               # activations + bias
@@ -43,6 +49,12 @@ class QuantConfig:
     target_lo: float = 0.1
     target_hi: float = 0.3
     ema: float = 0.9                # running-mean decay for |x| tracking
+
+    def policy(self):
+        """Lower onto the unified numerics policy (lazy import: configs
+        stay importable without pulling jax-heavy modules)."""
+        from ..numerics.policy import policy_from_quant_config
+        return policy_from_quant_config(self)
 
 
 # ---------------------------------------------------------------------------

@@ -1,4 +1,5 @@
-"""Low-precision training numerics (paper §3.2-3.3).
+"""Low-precision training numerics (paper §3.2-3.3) — the QAT-facing layer
+over the unified ``repro.numerics`` codecs.
 
 - Power-of-2-scaled symmetric fixed point: q = clip(round(x / 2^k), -2^{b-1}, 2^{b-1}-1)
 - Fake-quant with clipped straight-through estimator (STE): gradient passes
@@ -9,6 +10,12 @@
   samples and neurons of the same tensor-site; TT-factor scales are fixed.
 - BinaryConnect (Courbariaux et al. 2015): full-precision buffer updated with
   gradients taken w.r.t. the quantized parameters (see optim/binaryconnect.py).
+
+The round/clip/scale math lives in ``numerics/codecs.py`` (one
+implementation for training, optimizer state, the gradient wire, and the
+KV-cache); this module re-exports the §3.2 primitives and keeps the fused
+forward-activation/backward-gradient edge (``quant_edge``) plus the probe
+plumbing the scale manager uses to observe backward magnitudes.
 """
 from __future__ import annotations
 
@@ -18,86 +25,35 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from ..numerics.codecs import pow2_fake_quant, pow2_qdq, roundtrip
+from ..numerics.policy import (ScaleState, init_scale, step_log2,
+                               update_scale)
+from ..numerics.spec import QuantSpec, qrange
 
-def qrange(bits: int) -> tuple[float, float]:
-    return -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0
+__all__ = ["qrange", "fake_quant", "quantize_store", "ScaleState",
+           "init_scale", "update_scale", "quant_act", "ActQuant",
+           "init_act_quant", "quant_edge", "update_act_quant"]
 
-
-@partial(jax.custom_vjp, nondiff_argnums=(2,))
-def fake_quant(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
-    """Quantize-dequantize with pow-2 scale; STE in the backward pass."""
-    scale = jnp.exp2(scale_log2).astype(x.dtype)
-    lo, hi = qrange(bits)
-    q = jnp.clip(jnp.round(x / scale), lo, hi)
-    return q * scale
-
-
-def _fq_fwd(x, scale_log2, bits):
-    scale = jnp.exp2(scale_log2).astype(x.dtype)
-    lo, hi = qrange(bits)
-    inside = (x / scale >= lo) & (x / scale <= hi)
-    q = jnp.clip(jnp.round(x / scale), lo, hi)
-    return q * scale, inside
-
-
-def _fq_bwd(bits, inside, g):
-    # clipped STE: pass gradient only where |x| was representable
-    return (jnp.where(inside, g, 0.0).astype(g.dtype), None)
-
-
-fake_quant.defvjp(_fq_fwd, _fq_bwd)
+# canonical §3.2 Q(.) with clipped STE — one implementation, shared with the
+# Pallas codec backend (numerics/pallas_backend.py wraps the same vjp)
+fake_quant = pow2_fake_quant
 
 
 def quantize_store(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
     """Pure quantize (no STE) — the Q(.) of paper Eq. (3); used on the
     BinaryConnect buffer after the optimizer step."""
-    scale = jnp.exp2(scale_log2).astype(x.dtype)
-    lo, hi = qrange(bits)
-    return jnp.clip(jnp.round(x / scale), lo, hi) * scale
-
-
-# ---------------------------------------------------------------------------
-# Scale manager (§3.3)
-# ---------------------------------------------------------------------------
-
-class ScaleState(NamedTuple):
-    """Per-site dynamic scale: k (log2 scale) and the tracked mean |x/2^k|."""
-    log2: jax.Array     # int32 scalar
-    mean_abs: jax.Array  # f32 scalar, EMA of mean |x| / 2^k
-
-
-def init_scale(log2: int = 0) -> ScaleState:
-    return ScaleState(jnp.asarray(log2, jnp.int32), jnp.asarray(0.2, jnp.float32))
-
-
-def update_scale(state: ScaleState, x: jax.Array, *, lo: float = 0.1,
-                 hi: float = 0.3, ema: float = 0.9) -> ScaleState:
-    """Track mean|x/2^k| and adjust k to hold it in [lo, hi] (paper §3.3).
-
-    jit-friendly; runs on stop_gradient(x).
-    """
-    x = jax.lax.stop_gradient(x).astype(jnp.float32)
-    m = jnp.mean(jnp.abs(x)) / jnp.exp2(state.log2.astype(jnp.float32))
-    m = ema * state.mean_abs + (1.0 - ema) * m
-    up = (m > hi).astype(jnp.int32)      # too large -> coarser scale (k+1)
-    dn = (m < lo).astype(jnp.int32)      # too small -> finer scale (k-1)
-    new_log2 = state.log2 + up - dn
-    # after a bump the tracked statistic halves/doubles accordingly
-    m = m * jnp.exp2(-(up - dn).astype(jnp.float32))
-    return ScaleState(new_log2, m)
+    return roundtrip(x, QuantSpec("pow2", bits), scale_log2)
 
 
 def quant_act(x: jax.Array, state: ScaleState, bits: int) -> jax.Array:
     """Fake-quant an activation with its managed scale.
 
     The *hardware* scale is 2^k relative to the fractional fixed-point grid:
-    an 8-bit tensor with scale k holds values q*2^k/2^{b-1}*2^{b-1}... we fold
-    everything into: representable range = [-2^{b-1}, 2^{b-1}-1] * step where
-    step = 2^k / 2^{b-1}  (so "mean |x|/2^k in [0.1,0.3]" uses a healthy
-    fraction of the range).
+    representable range = [-2^{b-1}, 2^{b-1}-1] * step where
+    step = 2^{k-(b-1)}  (so "mean |x|/2^k in [0.1,0.3]" uses a healthy
+    fraction of the range) — see ``numerics.policy.step_log2``.
     """
-    step_log2 = state.log2.astype(jnp.float32) - (bits - 1)
-    return fake_quant(x, step_log2, bits)
+    return fake_quant(x, step_log2(state, bits), bits)
 
 
 class ActQuant(NamedTuple):
@@ -119,9 +75,7 @@ def init_act_quant() -> ActQuant:
 @partial(jax.custom_vjp, nondiff_argnums=(4, 5))
 def _quant_edge(x, act_log2, grad_log2, probe, act_bits: int, grad_bits: int):
     step = act_log2.astype(jnp.float32) - (act_bits - 1)
-    scale = jnp.exp2(step).astype(x.dtype)
-    lo, hi = qrange(act_bits)
-    return jnp.clip(jnp.round(x / scale), lo, hi) * scale
+    return pow2_qdq(x, step, act_bits)
 
 
 def _qe_fwd(x, act_log2, grad_log2, probe, act_bits, grad_bits):
@@ -129,17 +83,14 @@ def _qe_fwd(x, act_log2, grad_log2, probe, act_bits, grad_bits):
     scale = jnp.exp2(step).astype(x.dtype)
     lo, hi = qrange(act_bits)
     inside = (x / scale >= lo) & (x / scale <= hi)
-    y = jnp.clip(jnp.round(x / scale), lo, hi) * scale
-    return y, (inside, grad_log2)
+    return pow2_qdq(x, step, act_bits), (inside, grad_log2)
 
 
 def _qe_bwd(act_bits, grad_bits, res, g):
     inside, grad_log2 = res
     # quantize the incoming activation-gradient to grad_bits (paper: 16-bit)
     step = grad_log2.astype(jnp.float32) - (grad_bits - 1)
-    scale = jnp.exp2(step).astype(g.dtype)
-    lo, hi = qrange(grad_bits)
-    gq = jnp.clip(jnp.round(g / scale), lo, hi) * scale
+    gq = pow2_qdq(g, step, grad_bits)
     gq = jnp.where(inside, gq, 0.0).astype(g.dtype)
     # probe cotangent = mean |g| / 2^k : the scale-manager statistic.
     stat = jnp.mean(jnp.abs(g.astype(jnp.float32))) / jnp.exp2(grad_log2.astype(jnp.float32))

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import QuantConfig, TTConfig
-from . import quant as Q
+from ..numerics import QuantSpec, fake_quant
 from . import rank_adapt as RA
 from .ttm import TTMSpec, init_cores, make_spec, ttm_matvec
 
@@ -69,8 +69,10 @@ def effective_cores(params: Params, spec: TTMSpec, tt: TTConfig,
                               tt.prune_threshold)
         cores = RA.apply_masks(cores, masks)
     if qc.enable:
+        # the ``tt_factor`` site: pow-2 codec, fixed per-core scales (§3.2)
+        spec = QuantSpec("pow2", qc.weight_bits, 0, "int8", "fixed")
         steps = params["wscale_log2"]
-        cores = [Q.fake_quant(c, steps[n].astype(jnp.float32), qc.weight_bits)
+        cores = [fake_quant(c, spec, steps[n].astype(jnp.float32))
                  for n, c in enumerate(cores)]
     return cores
 

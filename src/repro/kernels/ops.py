@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ttm_pe1, ttm_pe2, ttm_pe3, quantize as qk
+from . import ttm_pe1, ttm_pe2, ttm_pe3
 
 
 def _interpret() -> bool:
@@ -92,19 +92,11 @@ def pe3(ybar: jax.Array, x: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("bits",))
 def quantize_fused(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
-    """Fused fake-quant over an arbitrary-shape tensor (reshaped to 2D)."""
-    shape = x.shape
-    flat = x.reshape(-1)
-    n = flat.shape[0]
-    bn = 256
-    cols = bn
-    rows = (n + cols - 1) // cols
-    x2 = _pad_to(flat, ((rows * cols),)).reshape(rows, cols)
-    bm = _blk(rows, 256, 8)
-    x2 = _pad_to(x2, (bm, bn))
-    out = qk.quantize(x2, step_log2, bits, bm=bm, bn=bn,
-                      interpret=_interpret())
-    return out.reshape(-1)[:n].reshape(shape)
+    """Fused fake-quant over an arbitrary-shape tensor — the pow2 Pallas
+    codec of ``repro.numerics`` (which pads/reshapes internally)."""
+    from ..numerics import QuantSpec, fake_quant
+    return fake_quant(x, QuantSpec("pow2", bits), step_log2,
+                      backend="pallas")
 
 
 def ttm_matvec_kernels(cores, x, spec):

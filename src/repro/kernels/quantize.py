@@ -1,43 +1,24 @@
-"""Fused pow-2 quantize-dequantize Pallas kernel (paper §3.2-3.3 numerics).
+"""Fused pow-2 quantize-dequantize (paper §3.2-3.3 numerics) — compat shim.
 
-One VMEM pass: scale -> round -> clip -> dequantize. On the FPGA this is the
-implicit writeback datapath of every PE; on TPU we expose it as a standalone
-elementwise kernel (used on the BinaryConnect buffer after the optimizer step
-and as the quant epilogue when not fused into PE1).
+The kernel now lives in the Pallas codec backend of the unified quantization
+API (``repro.numerics.pallas_backend``); this module keeps the historical
+entry point. Unlike the old kernel, padding to (bm, bn) block multiples is
+handled *internally* — callers pass any (M, N) operand.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
-import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
 
-
-def _quant_kernel(x_ref, step_ref, o_ref, *, bits: int):
-    scale = jnp.exp2(step_ref[0].astype(jnp.float32)).astype(x_ref.dtype)
-    lo = -(2.0 ** (bits - 1))
-    hi = 2.0 ** (bits - 1) - 1.0
-    x = x_ref[...]
-    o_ref[...] = (jnp.clip(jnp.round(x / scale), lo, hi) * scale).astype(o_ref.dtype)
+from ..numerics.pallas_backend import _elementwise_2d, _p2_fq_kernel
 
 
 def quantize(x2d: jax.Array, step_log2: jax.Array, bits: int, *,
              bm: int = 256, bn: int = 256, interpret: bool = True) -> jax.Array:
-    """(M, N) fused fake-quant; pre-padded to block multiples."""
-    m, n = x2d.shape
-    assert m % bm == 0 and n % bn == 0, (x2d.shape, bm, bn)
-    step = jnp.asarray(step_log2, jnp.float32).reshape(1)
-    kernel = functools.partial(_quant_kernel, bits=bits)
-    return pl.pallas_call(
-        kernel,
-        grid=(m // bm, n // bn),
-        in_specs=[
-            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((m, n), x2d.dtype),
-        interpret=interpret,
-    )(x2d, step)
+    """(M, N) fused fake-quant; pads to block multiples internally and
+    slices the result back to (M, N). ``interpret`` is ignored (the codec
+    backend selects it from the JAX backend)."""
+    del interpret
+    kernel = functools.partial(_p2_fq_kernel, bits=bits)
+    return _elementwise_2d(kernel, x2d, step_log2, x2d.dtype, bm=bm, bn=bn)

@@ -160,9 +160,10 @@ def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
 
 def _opt_shard(mesh, plan, state_shapes, pspec):
     """Sharding for AdamState: moments follow their param spec exactly.
-    The shape-preserving q8 states use the same spec (their last dim is a
-    padded multiple of the param's, so the same partitioning applies; the
-    per-block scale drops the last-axis sharding)."""
+    The shape-preserving q8 QTensor states use the same spec (their codes'
+    last dim is a padded multiple of the param's, so the same partitioning
+    applies; the per-block scale drops the last-axis sharding)."""
+    from ..numerics import QTensor
     from ..optim.adam import AdamState
     pspec_leaves = jax.tree_util.tree_flatten(
         pspec, is_leaf=lambda s: isinstance(s, P))[0]
@@ -172,23 +173,24 @@ def _opt_shard(mesh, plan, state_shapes, pspec):
         for m, ps in zip(mom, pspec_leaves):
             if m is None:
                 out.append(None)
-            elif isinstance(m, dict):
-                parts = list(ps) + [None] * (m["q"].ndim - len(ps))
-                q_parts = parts[:m["q"].ndim]
+            elif isinstance(m, QTensor):
+                parts = list(ps) + [None] * (m.codes.ndim - len(ps))
+                q_parts = parts[:m.codes.ndim]
                 s_parts = list(q_parts)
                 # scale's last axis is nb (small) — replicate it
                 if len(s_parts) >= 1:
                     s_parts[-1] = None
-                # q's last axis is a padded multiple; only shard it if the
-                # padded size still divides
+                # codes' last axis is a padded multiple; only shard it if
+                # the padded size still divides
                 if q_parts[-1] is not None:
                     ax = q_parts[-1]
                     size = mesh.shape[ax] if isinstance(ax, str) else \
                         int(np.prod([mesh.shape[a] for a in ax]))
-                    if m["q"].shape[-1] % size != 0:
+                    if m.codes.shape[-1] % size != 0:
                         q_parts[-1] = None
-                out.append({"q": NamedSharding(mesh, P(*q_parts)),
-                            "scale": NamedSharding(mesh, P(*s_parts))})
+                out.append(QTensor(NamedSharding(mesh, P(*q_parts)),
+                                   NamedSharding(mesh, P(*s_parts)),
+                                   m.spec, m.shape))
             else:
                 out.append(NamedSharding(mesh, ps))
         return tuple(out)

@@ -2,16 +2,16 @@
 real launcher runs. One code path for every arch in the zoo."""
 from __future__ import annotations
 
-import math
-from functools import partial
 from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ModelConfig, TrainConfig
+from ..configs.base import TrainConfig
 from ..models.lm import (LMDef, lm_decode_step, lm_forward, lm_lambda_update,
                          lm_prior_loss)
+from ..numerics import (NumericsPolicy, fake_quant,
+                        per_tensor_max_scale_log2)
 from ..optim import (AdamState, adam_update, clip_by_global_norm, init_adam,
                      lr_at)
 from ..sharding import ShardPlan
@@ -22,17 +22,56 @@ class TrainState(NamedTuple):
     opt: AdamState
     step: jax.Array
     residual: Any = None     # grad-compression error feedback (optional)
+    scales: Any = None       # NumericsPolicy managed scale-state tree
+                             # ({site: ScaleState}, optional)
 
 
-def init_train_state(params, tcfg: TrainConfig) -> TrainState:
+def init_train_state(params, tcfg: TrainConfig,
+                     policy: NumericsPolicy | None = None) -> TrainState:
     residual = None
     if tcfg.grad_compress:
         residual = tuple(
             jnp.zeros(p.shape, jnp.float32)
             if jnp.issubdtype(p.dtype, jnp.floating) else None
             for p in jax.tree_util.tree_leaves(params))
+    scales = None
+    if policy is not None and policy.enable:
+        scales = policy.init_scales()
     return TrainState(params, init_adam(params, tcfg),
-                      jnp.zeros((), jnp.int32), residual)
+                      jnp.zeros((), jnp.int32), residual, scales)
+
+
+def _quantize_grad_edge(grads, scales, policy: NumericsPolicy):
+    """The ``grad_edge`` site at the step level: round the weight-gradient
+    tree onto the grad_bits pow-2 grid (paper: 16-bit gradients).
+
+    Each gradient leaf is its own tensor-site, so each gets a
+    per-tensor-max scale — the grid always covers max|g| and rounding is
+    clip-free (a pooled scale would persistently clip large-magnitude
+    leaves such as embedding/norm grads). The policy's managed
+    ``grad_edge`` ScaleState still advances on the tree-wide magnitude:
+    it is the §3.3 statistic the activation-gradient edges
+    (``core.quant.quant_edge``) share."""
+    if scales is None or "grad_edge" not in scales:
+        return grads, scales
+    spec = policy.spec_for("grad_edge")
+
+    def is_f(g):
+        return hasattr(g, "dtype") and g.dtype != jax.dtypes.float0 \
+            and jnp.issubdtype(g.dtype, jnp.floating)
+
+    def q(g):
+        if not is_f(g):
+            return g
+        step = per_tensor_max_scale_log2(g, spec)
+        return fake_quant(g, spec, step)
+
+    gq = jax.tree.map(q, grads)
+    leaves = [g for g in jax.tree_util.tree_leaves(grads) if is_f(g)]
+    tot = sum(jnp.sum(jnp.abs(g.astype(jnp.float32))) for g in leaves)
+    cnt = sum(g.size for g in leaves)
+    gm = (tot / jnp.maximum(cnt, 1))[None]
+    return gq, policy.update_scales(scales, {"grad_edge": gm})
 
 
 def _ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -79,6 +118,7 @@ def make_loss_fn(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
 
 def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
     loss_fn = make_loss_fn(lm, plan, tcfg)
+    policy = lm.cfg.quant.policy()
 
     def train_step(state: TrainState, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -86,9 +126,12 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
         residual = state.residual
         if tcfg.grad_compress:
             # int8-valued grads + error feedback BEFORE the DP reduce:
-            # the all-reduce then moves 1/4 the wire bytes (optim/grad_compress)
+            # the all-reduce then moves 1/4 the wire bytes — the ``dp_wire``
+            # site of the numerics policy (optim/grad_compress)
             from ..optim.grad_compress import compress_decompress
-            grads, residual = compress_decompress(grads, residual)
+            grads, residual = compress_decompress(
+                grads, residual, policy.spec_for("dp_wire"))
+        grads, scales = _quantize_grad_edge(grads, state.scales, policy)
         if tcfg.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         else:
@@ -98,15 +141,23 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
         # closed-form Eq.(4) rank-hyperparameter update (no-op if TT off)
         params = lm_lambda_update(params, lm)
         metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
-        return TrainState(params, opt, state.step + 1, residual), metrics
+        return TrainState(params, opt, state.step + 1, residual,
+                          scales), metrics
 
     return train_step
 
 
 def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
                                n_micro: int):
-    """Gradient-accumulation variant: batch leading dim = n_micro."""
+    """Gradient-accumulation variant: batch leading dim = n_micro.
+
+    Numerics contract: identical to ``make_train_step`` after the gradient
+    average — compression/error-feedback, the grad_edge quantizer, and
+    clipping all apply to the accumulated mean gradient, and the residual /
+    scale trees are carried exactly as in the non-accum step (asserted by
+    tests/test_numerics.py)."""
     loss_fn = make_loss_fn(lm, plan, tcfg)
+    policy = lm.cfg.quant.policy()
 
     def train_step(state: TrainState, batch):
         def micro(carry, mb):
@@ -124,12 +175,21 @@ def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
             jnp.zeros((), jnp.float32), state.params)
         (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), batch)
         grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        residual = state.residual
+        if tcfg.grad_compress:
+            from ..optim.grad_compress import compress_decompress
+            grads, residual = compress_decompress(
+                grads, residual, policy.spec_for("dp_wire"))
+        grads, scales = _quantize_grad_edge(grads, state.scales, policy)
         if tcfg.grad_clip > 0:
-            grads, _ = clip_by_global_norm(grads, tcfg.grad_clip)
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
         lr = lr_at(state.step, tcfg)
         params, opt = adam_update(state.params, grads, state.opt, lr, tcfg)
         params = lm_lambda_update(params, lm)
-        return TrainState(params, opt, state.step + 1), {"loss": lsum / n_micro}
+        return TrainState(params, opt, state.step + 1, residual, scales), \
+            {"loss": lsum / n_micro, "gnorm": gnorm, "lr": lr}
 
     return train_step
 

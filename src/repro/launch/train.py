@@ -93,7 +93,9 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
     lm = build_lm(cfg)
     key = jax.random.PRNGKey(tcfg.seed)
     params = init_lm(key, lm)
-    state = init_train_state(params, tcfg)
+    # the numerics policy owns the managed scale-state tree (threaded
+    # through TrainState; no-op scales=None when quantization is off)
+    state = init_train_state(params, tcfg, policy=cfg.quant.policy())
     step_fn = jax.jit(make_train_step(lm, plan, tcfg), donate_argnums=(0,))
 
     ckpt = AsyncCheckpointer(tcfg.ckpt_dir)

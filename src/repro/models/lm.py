@@ -302,15 +302,22 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
 
 
 def sub_ffn_decode(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
-                   plan: ShardPlan) -> jax.Array:
+                   plan: ShardPlan,
+                   token_mask: jax.Array | None = None) -> jax.Array:
     """Post-mixer FFN/MoE half of a sublayer (shared by the static decode
-    path and repro.serve's paged decode/chunk steps)."""
+    path and repro.serve's paged decode/chunk steps).
+
+    ``token_mask``: optional (B, S) bool of real tokens — inactive serve
+    slots / prefill-chunk padding are masked out of the MoE router so junk
+    tokens never consume expert capacity (dense FFN ignores it: per-token
+    math can't interfere across rows)."""
     if sub.ffn_kind is None:
         return x
     h = rms_norm(x, pp["norm2"]["scale"], cfg.norm_eps)
     if sub.ffn_kind == "moe":
         out, _ = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
-                               mesh=plan.mesh, dp_axes=plan.dp_axes)
+                               mesh=plan.mesh, dp_axes=plan.dp_axes,
+                               token_mask=token_mask)
     else:
         out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
     return x + out

@@ -89,8 +89,14 @@ def init_moe(key: jax.Array, d: MoEDef, cfg: ModelConfig) -> dict:
     return p
 
 
-def _route(params, x2d, d: MoEDef, cfg: ModelConfig):
-    """x2d: (T, D) -> (topk_idx (T,k), topk_w (T,k), aux_loss)."""
+def _route(params, x2d, d: MoEDef, cfg: ModelConfig, mask=None):
+    """x2d: (T, D) -> (topk_idx (T,k), topk_w (T,k), aux_loss).
+
+    ``mask``: optional (T,) bool of *real* tokens. Masked tokens (inactive
+    serve slots, prefill padding) get zero combine weight — so they never
+    win a capacity slot against a real token in ``_dispatch_local``'s
+    top-C selection — and are excluded from the load-balance statistics.
+    """
     logits = apply_site(params["router"], x2d.astype(jnp.float32),
                         d.router, cfg).astype(jnp.float32)
     probs = jax.nn.softmax(logits, axis=-1)
@@ -99,10 +105,28 @@ def _route(params, x2d, d: MoEDef, cfg: ModelConfig):
     # switch aux loss: E * sum_e f_e * p_e
     e = d.num_experts
     dispatch = jax.nn.one_hot(topk_idx[:, 0], e)     # count top-1 for f_e
-    f_e = jnp.mean(dispatch, axis=0)
-    p_e = jnp.mean(probs, axis=0)
+    if mask is not None:
+        mf = mask.astype(jnp.float32)[:, None]
+        topk_w = topk_w * mf
+        n = jnp.maximum(jnp.sum(mf), 1.0)
+        f_e = jnp.sum(dispatch * mf, axis=0) / n
+        p_e = jnp.sum(probs * mf, axis=0) / n
+    else:
+        f_e = jnp.mean(dispatch, axis=0)
+        p_e = jnp.mean(probs, axis=0)
     aux = e * jnp.sum(f_e * p_e)
     return topk_idx, topk_w.astype(x2d.dtype), aux
+
+
+def _shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: ``jax.shard_map`` (new API, check_vma)
+    with fallback to ``jax.experimental.shard_map`` (check_rep)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 def _expert_glu(eparams, xe, d: MoEDef, cfg: ModelConfig):
@@ -140,16 +164,22 @@ def _dispatch_local(x2d, topk_idx, topk_w, eparams, d: MoEDef, cfg: ModelConfig,
 
 
 def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
-                mesh=None, dp_axes=("data",), ep_axis: str = "model"
+                mesh=None, dp_axes=("data",), ep_axis: str = "model",
+                token_mask: jax.Array | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out, aux_loss).
 
     If ``mesh`` has a >1-sized ``ep_axis``, runs the shard_map EP path;
     otherwise the single-shard path (same math, e_start=0, all experts local).
+
+    ``token_mask``: optional (B, S) bool of real tokens; masked tokens
+    (inactive serve slots, chunked-prefill padding) are dropped from the
+    router so they cannot consume expert capacity (see ``_route``).
     """
     b, s, dm = x.shape
     x2d = x.reshape(b * s, dm)
-    topk_idx, topk_w, aux = _route(params, x2d, d, cfg)
+    mask = None if token_mask is None else token_mask.reshape(b * s)
+    topk_idx, topk_w, aux = _route(params, x2d, d, cfg, mask)
     eparams = {"gate": params["gate"], "up": params["up"], "down": params["down"]}
 
     ep = 1
@@ -204,12 +234,11 @@ def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
                                             scatter_dimension=1, tiled=True)
             return jax.lax.psum(out_loc, ep_axis)
 
-        out = jax.shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(tok_spec, tok_spec, tok_spec,
-                      jax.tree.map(lambda _: P(ep_axis), eparams)),
-            out_specs=out_spec,
-            check_vma=False,
+        out = _shard_map(
+            shard_fn, mesh,
+            (tok_spec, tok_spec, tok_spec,
+             jax.tree.map(lambda _: P(ep_axis), eparams)),
+            out_spec,
         )(x, topk_idx.reshape(b, s, d.top_k),
           topk_w.reshape(b, s, d.top_k), eparams)
         out = out.reshape(b * s, dm)

@@ -1,0 +1,21 @@
+"""repro.numerics — the unified quantization API.
+
+One pow-2-scaled symmetric fixed-point scheme (paper §3.2-3.3) plus its
+blockwise-absmax extension carries every low-precision site in the system:
+TT-factor weights, activations, gradient edges, optimizer moments, the
+data-parallel gradient wire, and the serving KV-cache.
+
+- ``QuantSpec``      frozen descriptor of one scheme (kind/bits/block/...)
+- ``QTensor``        codes + scale metadata container (``nbytes()``)
+- ``encode/decode/fake_quant``  codec operations; ``get_codec`` selects a
+  backend ("reference" jnp or "pallas" fused kernels — bit-identical)
+- ``NumericsPolicy`` named sites -> specs, JSON-round-trippable, owner of
+  the managed scale-state tree (§3.3 scale manager)
+"""
+from .codecs import (decode, encode, fake_quant, get_codec,  # noqa: F401
+                     per_tensor_max_scale_log2, pow2_fake_quant, pow2_qdq,
+                     register_codec, roundtrip, BACKENDS)
+from .policy import (NumericsPolicy, SITES, ScaleState,  # noqa: F401
+                     init_scale, policy_from_quant_config, step_log2,
+                     update_scale)
+from .spec import QTensor, QuantSpec, qrange, spec_nbytes  # noqa: F401

@@ -1,0 +1,234 @@
+"""Pallas codec backend: fused quantize kernels behind the same
+``encode / decode / fake_quant`` API as the reference backend.
+
+Absorbs the old ``kernels/quantize.py`` fused fake-quant (one VMEM pass:
+scale -> round -> clip -> dequantize — on the FPGA this is the implicit
+writeback datapath of every PE) and adds code-producing encode / decode
+kernels plus a blockwise-absmax kernel pair.
+
+All entry points pad to block multiples *internally* and slice the result
+back, so callers never pre-pad (the old ``quantize()`` asserted exact
+(bm, bn) multiples — that footgun is gone). Kernels run compiled on TPU and
+in interpret mode elsewhere, where the kernel body executes as jnp — which
+is also why the backend is bit-identical to the reference codec (asserted
+by tests/test_numerics.py).
+
+Scale handling: the fused kernels take one scalar ``scale_log2`` through
+SMEM (per-tensor pow-2 scale, the §3.2 scheme). Calls with a non-scalar
+scale array (e.g. the KV pool's per-(layer, slot) scales) fall back to the
+reference codec — vectorized multi-scale kernels are a perf follow-up.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .codecs import (Pow2Reference, BlockwiseReference, _p2fq_bwd, _p2fq_fwd,
+                     register_codec)
+from .spec import QTensor, QuantSpec, qrange
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _blk(dim: int, pref: int, floor: int) -> int:
+    if dim >= pref:
+        return pref
+    return max(floor, ((dim + floor - 1) // floor) * floor)
+
+
+def _pad2d(x: jax.Array, bm: int, bn: int) -> jax.Array:
+    m, n = x.shape
+    pm, pn = (-m) % bm, (-n) % bn
+    if pm or pn:
+        return jnp.pad(x, ((0, pm), (0, pn)))
+    return x
+
+
+def _as2d(flat: jax.Array, cols: int = 256) -> tuple[jax.Array, int]:
+    """(n,) -> (rows, cols) zero-padded; returns (x2d, n)."""
+    n = flat.shape[0]
+    rows = -(-n // cols)
+    pad = rows * cols - n
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(rows, cols), n
+
+
+# ---------------------------------------------------------------------------
+# pow2 kernels
+# ---------------------------------------------------------------------------
+
+def _p2_fq_kernel(x_ref, step_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(step_ref[0].astype(jnp.float32)).astype(x_ref.dtype)
+    lo, hi = qrange(bits)
+    x = x_ref[...]
+    o_ref[...] = (jnp.clip(jnp.round(x / scale), lo, hi) * scale
+                  ).astype(o_ref.dtype)
+
+
+def _p2_enc_kernel(x_ref, step_ref, o_ref, *, bits: int):
+    scale = jnp.exp2(step_ref[0].astype(jnp.float32))
+    lo, hi = qrange(bits)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.clip(jnp.round(x / scale), lo, hi).astype(o_ref.dtype)
+
+
+def _p2_dec_kernel(q_ref, step_ref, o_ref):
+    scale = jnp.exp2(step_ref[0].astype(jnp.float32))
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+def _elementwise_2d(kernel, x2d: jax.Array, step_log2, out_dtype, *,
+                    bm: int = 256, bn: int = 256) -> jax.Array:
+    """Grid-tiled elementwise pass with the scalar step in SMEM; pads the
+    operand to (bm, bn) multiples internally and slices the result back."""
+    m, n = x2d.shape
+    xp = _pad2d(x2d, bm, bn)
+    mp, np_ = xp.shape
+    step = jnp.asarray(step_log2, jnp.float32).reshape(1)
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=_interpret(),
+    )(xp, step)
+    return out[:m, :n]
+
+
+def _flat_call(kernel, x: jax.Array, step_log2, out_dtype) -> jax.Array:
+    """Arbitrary-shape elementwise call: flatten -> 2D tile -> restore."""
+    shape = x.shape
+    x2d, n = _as2d(x.reshape(-1))
+    bm = _blk(x2d.shape[0], 256, 8)
+    out = _elementwise_2d(kernel, x2d, step_log2, out_dtype, bm=bm)
+    return out.reshape(-1)[:n].reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _p2_fake_quant_pallas(x, scale_log2, bits):
+    return _flat_call(functools.partial(_p2_fq_kernel, bits=bits), x,
+                      scale_log2, x.dtype)
+
+
+# same clipped-STE backward as the reference codec; the forward residual
+# (the inside-range mask) is cheap enough to compute outside the kernel
+_p2_fake_quant_pallas.defvjp(
+    lambda x, s, bits: (_p2_fake_quant_pallas(x, s, bits),
+                        _p2fq_fwd(x, s, bits)[1]),
+    _p2fq_bwd)
+
+
+class Pow2Pallas(Pow2Reference):
+    backend = "pallas"
+
+    @staticmethod
+    def _scalar(scale) -> bool:
+        return jnp.ndim(scale) == 0 or getattr(scale, "size", 2) == 1
+
+    def encode(self, x, spec: QuantSpec, scale):
+        if not self._scalar(scale):
+            return super().encode(x, spec, scale)
+        codes = _flat_call(functools.partial(_p2_enc_kernel, bits=spec.bits),
+                           x, scale, spec.jnp_storage)
+        return QTensor(codes, jnp.asarray(scale), spec, x.shape)
+
+    def decode(self, qt: QTensor, dtype=jnp.float32):
+        if not self._scalar(qt.scale):
+            return super().decode(qt, dtype)
+        return _flat_call(_p2_dec_kernel, qt.codes, qt.scale, dtype)
+
+    def fake_quant(self, x, spec: QuantSpec, scale):
+        if not self._scalar(scale):
+            return super().fake_quant(x, spec, scale)
+        return _p2_fake_quant_pallas(x, scale, spec.bits)
+
+
+# ---------------------------------------------------------------------------
+# blockwise kernels
+# ---------------------------------------------------------------------------
+
+def _bw_enc_kernel(x_ref, q_ref, s_ref, *, qmax: float):
+    x = x_ref[...].astype(jnp.float32)                 # (bm, b)
+    sc = jnp.max(jnp.abs(x), axis=1, keepdims=True) / qmax
+    q = jnp.round(x / jnp.maximum(sc, 1e-20))
+    q_ref[...] = jnp.clip(q, -qmax, qmax).astype(q_ref.dtype)
+    s_ref[...] = sc
+
+
+def _bw_dec_kernel(q_ref, s_ref, o_ref):
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * s_ref[...]
+                  ).astype(o_ref.dtype)
+
+
+class BlockwisePallas(BlockwiseReference):
+    backend = "pallas"
+
+    def encode(self, x, spec: QuantSpec, scale=None):
+        v = x.astype(jnp.float32)
+        if v.ndim == 0:
+            v = v[None]
+        shape = v.shape
+        from .codecs import blockwise_geometry
+        b, nb, pad = blockwise_geometry(spec, shape[-1])
+        if pad:
+            v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
+        rows = 1
+        for d in v.shape[:-1]:
+            rows *= d
+        x2d = v.reshape(rows, nb * b)
+        bm = _blk(rows, 256, 8)
+        xp = _pad2d(x2d, bm, b)
+        mp = xp.shape[0]
+        codes, sc = pl.pallas_call(
+            functools.partial(_bw_enc_kernel, qmax=spec.qmax),
+            grid=(mp // bm, nb),
+            in_specs=[pl.BlockSpec((bm, b), lambda i, j: (i, j))],
+            out_specs=[pl.BlockSpec((bm, b), lambda i, j: (i, j)),
+                       pl.BlockSpec((bm, 1), lambda i, j: (i, j))],
+            out_shape=[jax.ShapeDtypeStruct((mp, nb * b), spec.jnp_storage),
+                       jax.ShapeDtypeStruct((mp, nb), jnp.float32)],
+            interpret=_interpret(),
+        )(xp)
+        codes = codes[:rows].reshape(v.shape[:-1] + (nb * b,))
+        sc = sc[:rows].reshape(v.shape[:-1] + (nb,))
+        return QTensor(codes, sc, spec, shape)
+
+    def decode(self, qt: QTensor, dtype=jnp.float32):
+        nb = qt.scale.shape[-1]
+        b = qt.codes.shape[-1] // nb
+        rows = 1
+        for d in qt.codes.shape[:-1]:
+            rows *= d
+        q2d = qt.codes.reshape(rows, nb * b)
+        s2d = qt.scale.reshape(rows, nb)
+        bm = _blk(rows, 256, 8)
+        qp = _pad2d(q2d, bm, b)
+        sp = _pad2d(s2d, bm, 1)
+        mp = qp.shape[0]
+        out = pl.pallas_call(
+            _bw_dec_kernel,
+            grid=(mp // bm, nb),
+            in_specs=[pl.BlockSpec((bm, b), lambda i, j: (i, j)),
+                      pl.BlockSpec((bm, 1), lambda i, j: (i, j))],
+            out_specs=pl.BlockSpec((bm, b), lambda i, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((mp, nb * b), jnp.float32),
+            interpret=_interpret(),
+        )(qp, sp)
+        flat = out[:rows].reshape(qt.codes.shape[:-1] + (nb * b,))
+        sliced = flat[..., :qt.shape[-1]] if qt.shape else flat[..., :1]
+        return sliced.reshape(qt.shape).astype(dtype)
+
+
+register_codec("pow2", "pallas", Pow2Pallas())
+register_codec("blockwise", "pallas", BlockwisePallas())

@@ -1,0 +1,177 @@
+"""NumericsPolicy: named quantization sites -> QuantSpec, plus the §3.3
+scale manager that owns every *managed* pow-2 scale.
+
+The paper's claim is that ONE hardware-friendly low-precision scheme carries
+the whole training pipeline. The policy is that claim as an object: a frozen
+map from the pipeline's quantization sites to specs, JSON-round-trippable so
+a training run's numerics are a single serializable artifact.
+
+Site names (``SITES``):
+
+- ``tt_factor``        TT-core weights (4-bit pow2, fixed scales — §3.2)
+- ``activation``       forward activations (8-bit pow2, managed — §3.3)
+- ``grad_edge``        backward activation-gradients (16-bit pow2, managed)
+- ``optimizer_moment`` Adam m/v state (blockwise int8, block 256)
+- ``dp_wire``          data-parallel gradient all-reduce (blockwise int8,
+                       block 1024, error feedback in optim/grad_compress)
+- ``kv_cache``         serving KV entries (8-bit pow2, per-tensor-max scale
+                       chosen at prefill — serve/kv_cache.py)
+
+Scale-state: the policy hands out one ``ScaleState`` per managed site
+(``init_scales``) and the resulting tree is threaded through ``TrainState``
+(launch/steps.py) and the serve engine's pool (``scale_log2`` leaves), so
+every dynamic scale in the system has a single owner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .spec import QuantSpec
+
+SITES = ("tt_factor", "activation", "grad_edge", "optimizer_moment",
+         "dp_wire", "kv_cache")
+
+
+# ---------------------------------------------------------------------------
+# Scale manager (§3.3) — owned here; core/quant.py re-exports for compat
+# ---------------------------------------------------------------------------
+
+class ScaleState(NamedTuple):
+    """Per-site dynamic pow-2 scale: k (log2 scale) and the tracked mean
+    |x / 2^k| the manager drives into the target band."""
+    log2: jax.Array      # int32 scalar
+    mean_abs: jax.Array  # f32 scalar, EMA of mean |x| / 2^k
+
+
+def init_scale(log2: int = 0) -> ScaleState:
+    return ScaleState(jnp.asarray(log2, jnp.int32),
+                      jnp.asarray(0.2, jnp.float32))
+
+
+def update_scale(state: ScaleState, x: jax.Array, *, lo: float = 0.1,
+                 hi: float = 0.3, ema: float = 0.9) -> ScaleState:
+    """Track mean|x/2^k| and adjust k to hold it in [lo, hi] (paper §3.3).
+
+    jit-friendly; runs on stop_gradient(x).
+    """
+    x = jax.lax.stop_gradient(x).astype(jnp.float32)
+    m = jnp.mean(jnp.abs(x)) / jnp.exp2(state.log2.astype(jnp.float32))
+    m = ema * state.mean_abs + (1.0 - ema) * m
+    up = (m > hi).astype(jnp.int32)      # too large -> coarser scale (k+1)
+    dn = (m < lo).astype(jnp.int32)      # too small -> finer scale (k-1)
+    new_log2 = state.log2 + up - dn
+    # after a bump the tracked statistic halves/doubles accordingly
+    m = m * jnp.exp2(-(up - dn).astype(jnp.float32))
+    return ScaleState(new_log2, m)
+
+
+def step_log2(state: ScaleState, bits: int) -> jax.Array:
+    """Grid step exponent of a managed scale: the representable range
+    [-2^{b-1}, 2^{b-1}-1] * 2^{k-(b-1)} then covers ~2^k (so "mean |x|/2^k
+    in [0.1, 0.3]" uses a healthy fraction of the range)."""
+    return state.log2.astype(jnp.float32) - (bits - 1)
+
+
+# ---------------------------------------------------------------------------
+# Policy
+# ---------------------------------------------------------------------------
+
+def _default_sites(weight_bits: int = 4, act_bits: int = 8,
+                   grad_bits: int = 16) -> tuple[tuple[str, QuantSpec], ...]:
+    return (
+        ("tt_factor", QuantSpec("pow2", weight_bits, 0, "int8", "fixed")),
+        ("activation", QuantSpec("pow2", act_bits, 0, "int8", "managed")),
+        ("grad_edge", QuantSpec("pow2", grad_bits, 0, "int16", "managed")),
+        ("optimizer_moment",
+         QuantSpec("blockwise", 8, 256, "int8", "per_tensor_max")),
+        ("dp_wire", QuantSpec("blockwise", 8, 1024, "int8", "per_tensor_max")),
+        ("kv_cache", QuantSpec("pow2", 8, 0, "int8", "per_tensor_max")),
+    )
+
+
+@dataclass(frozen=True)
+class NumericsPolicy:
+    """Frozen site -> QuantSpec map + scale-manager knobs. Hashable, so it
+    can ride as a static argument of jitted step functions."""
+    enable: bool = False
+    sites: tuple[tuple[str, QuantSpec], ...] = _default_sites()
+    # scale manager (§3.3): keep mean |x/2^k| within [lo, hi]
+    target_lo: float = 0.1
+    target_hi: float = 0.3
+    ema: float = 0.9
+
+    def spec_for(self, site: str) -> QuantSpec:
+        for name, spec in self.sites:
+            if name == site:
+                return spec
+        raise KeyError(f"unknown numerics site {site!r}; "
+                       f"known: {[n for n, _ in self.sites]}")
+
+    def with_spec(self, site: str, spec: QuantSpec) -> "NumericsPolicy":
+        if site not in [n for n, _ in self.sites]:
+            raise KeyError(site)
+        new = tuple((n, spec if n == site else s) for n, s in self.sites)
+        return dataclasses.replace(self, sites=new)
+
+    # scale-state tree ----------------------------------------------------
+    def managed_sites(self) -> tuple[str, ...]:
+        return tuple(n for n, s in self.sites if s.scale_policy == "managed")
+
+    def init_scales(self) -> dict[str, ScaleState]:
+        """One ScaleState per managed site — the scale-state tree threaded
+        through TrainState (and, for kv_cache, materialized per (layer,
+        slot) by serve/kv_cache.init_pool)."""
+        return {n: init_scale(0) for n in self.managed_sites()}
+
+    def update_scales(self, scales: dict, observed: dict) -> dict:
+        """Scale-manager step for every observed site. ``observed`` maps
+        site name -> tensor whose magnitude statistic to track."""
+        out = dict(scales)
+        for name, x in observed.items():
+            if name in out:
+                out[name] = update_scale(out[name], x, lo=self.target_lo,
+                                         hi=self.target_hi, ema=self.ema)
+        return out
+
+    # JSON ----------------------------------------------------------------
+    def to_json_dict(self) -> dict:
+        return {
+            "enable": self.enable,
+            "sites": {n: s.to_json_dict() for n, s in self.sites},
+            "target_lo": self.target_lo,
+            "target_hi": self.target_hi,
+            "ema": self.ema,
+        }
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "NumericsPolicy":
+        sites = tuple((n, QuantSpec.from_json_dict(s))
+                      for n, s in d["sites"].items())
+        return cls(enable=d["enable"], sites=sites,
+                   target_lo=d.get("target_lo", 0.1),
+                   target_hi=d.get("target_hi", 0.3),
+                   ema=d.get("ema", 0.9))
+
+    def to_json(self) -> str:
+        # no sort_keys: the sites map is ordered and the order is identity
+        return json.dumps(self.to_json_dict(), indent=2)
+
+    @classmethod
+    def from_json(cls, s: str) -> "NumericsPolicy":
+        return cls.from_json_dict(json.loads(s))
+
+
+def policy_from_quant_config(qc) -> NumericsPolicy:
+    """The back-compat constructor: ``configs.base.QuantConfig`` (the
+    paper-era knob set) lowered onto the unified policy. ``QuantConfig``
+    remains the config-surface type; this is its semantics."""
+    return NumericsPolicy(
+        enable=qc.enable,
+        sites=_default_sites(qc.weight_bits, qc.act_bits, qc.grad_bits),
+        target_lo=qc.target_lo, target_hi=qc.target_hi, ema=qc.ema)

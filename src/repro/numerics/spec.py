@@ -1,0 +1,157 @@
+"""Quantization descriptors: ``QuantSpec`` (how to quantize) and ``QTensor``
+(a quantized tensor: codes + scale metadata).
+
+One frozen ``QuantSpec`` describes every low-precision scheme the repo uses
+(paper §3.2-3.3 and its serving/optimizer extensions):
+
+- ``kind="pow2"``: symmetric fixed point on a power-of-2 grid,
+  ``x ≈ q * 2^scale_log2`` with ``q ∈ [-2^{b-1}, 2^{b-1}-1]``. The scale is
+  supplied by the caller (fixed, scale-managed, or chosen per tensor from
+  max|x| — see ``scale_policy``).
+- ``kind="blockwise"``: Dettmers-style per-block absmax quantization along
+  the last axis, ``q ∈ [-(2^{b-1}-1), 2^{b-1}-1]``, one f32 scale per block
+  of ``block`` elements. The scale is derived from the data inside
+  ``encode`` (always per-block max — ``scale_policy`` is informational).
+
+``scale_policy`` records who owns the scale at a site:
+
+- ``"fixed"``: a constant chosen at init (TT factors, paper §3.2).
+- ``"managed"``: the §3.3 scale manager adjusts an integer log2 exponent to
+  keep mean|x/2^k| inside a target band (activations, gradient edges).
+- ``"per_tensor_max"``: derived from max|x| when the tensor is first seen
+  (KV-cache prefill, blockwise optimizer/wire codecs).
+
+Specs are plain frozen dataclasses: hashable (usable as static jit args),
+JSON-round-trippable via ``to_json_dict``/``from_json_dict``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("pow2", "blockwise")
+SCALE_POLICIES = ("fixed", "managed", "per_tensor_max")
+STORAGE_DTYPES = ("int8", "int16", "int32", "float32")
+
+
+def qrange(bits: int) -> tuple[float, float]:
+    """Representable code range of a ``bits``-bit pow2 grid (paper §3.2):
+    the full asymmetric two's-complement range."""
+    return -(2.0 ** (bits - 1)), 2.0 ** (bits - 1) - 1.0
+
+
+@dataclass(frozen=True)
+class QuantSpec:
+    """Frozen description of one quantization scheme."""
+    kind: str = "pow2"              # "pow2" | "blockwise"
+    bits: int = 8
+    block: int = 0                  # blockwise: elements per scale (0 for pow2)
+    storage_dtype: str = "int8"     # dtype codes are materialized in
+    scale_policy: str = "fixed"     # "fixed" | "managed" | "per_tensor_max"
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown kind {self.kind!r}; one of {KINDS}")
+        if self.scale_policy not in SCALE_POLICIES:
+            raise ValueError(f"unknown scale_policy {self.scale_policy!r}")
+        if self.kind == "blockwise" and self.block <= 0:
+            raise ValueError("blockwise spec needs block > 0")
+
+    @property
+    def qmin(self) -> float:
+        lo, hi = qrange(self.bits)
+        # blockwise codecs are symmetric (±qmax) so that scale = absmax/qmax
+        # is exact at both ends; pow2 uses the full two's-complement range.
+        return -hi if self.kind == "blockwise" else lo
+
+    @property
+    def qmax(self) -> float:
+        return qrange(self.bits)[1]
+
+    @property
+    def jnp_storage(self):
+        return jnp.dtype(self.storage_dtype)
+
+    def to_json_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "QuantSpec":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# QTensor
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_with_keys_class
+class QTensor:
+    """A quantized tensor: integer ``codes`` + ``scale`` metadata.
+
+    - pow2: ``codes`` has the logical shape, ``scale`` is the (broadcastable)
+      ``scale_log2`` array/scalar; value = codes * 2^scale.
+    - blockwise: ``codes`` is ``shape[:-1] + (nb*block,)`` (last axis padded
+      to a block multiple), ``scale`` is ``shape[:-1] + (nb,)`` f32;
+      value = codes * scale per block, sliced back to ``shape``.
+
+    ``spec`` and the logical ``shape`` ride as static pytree aux data, so a
+    QTensor can sit inside jitted state trees (optimizer moments) and
+    checkpoints like any other pytree node.
+    """
+
+    __slots__ = ("codes", "scale", "spec", "shape")
+
+    def __init__(self, codes, scale, spec: QuantSpec,
+                 shape: tuple[int, ...] | None = None):
+        self.codes = codes
+        self.scale = scale
+        self.spec = spec
+        self.shape = tuple(shape) if shape is not None \
+            else tuple(getattr(codes, "shape", ()))
+
+    def nbytes(self) -> int:
+        """Resident bytes of the quantized representation."""
+        return int(getattr(self.codes, "nbytes", 0)) \
+            + int(getattr(self.scale, "nbytes", 0))
+
+    def dequantize(self, dtype=jnp.float32):
+        """Decode through the reference codec (convenience)."""
+        from .codecs import get_codec
+        return get_codec(self.spec, "reference").decode(self, dtype)
+
+    def __repr__(self):
+        return (f"QTensor(kind={self.spec.kind!r}, bits={self.spec.bits}, "
+                f"shape={self.shape}, nbytes={self.nbytes()})")
+
+    # pytree protocol -----------------------------------------------------
+    def tree_flatten_with_keys(self):
+        # keys are DictKey("q")/DictKey("scale") — NOT GetAttrKey — so the
+        # flattened paths ("...§q", "...§scale") match the pre-QTensor
+        # {"q": ..., "scale": ...} dict layout and old int8 optimizer-state
+        # checkpoints keep loading (ckpt/checkpoint.py keys by tree path)
+        return (((jax.tree_util.DictKey("q"), self.codes),
+                 (jax.tree_util.DictKey("scale"), self.scale)),
+                (self.spec, self.shape))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        spec, shape = aux
+        return cls(children[0], children[1], spec, shape)
+
+
+def spec_nbytes(spec: QuantSpec, shape: tuple[int, ...]) -> int:
+    """Analytic resident bytes of quantizing ``shape`` under ``spec``
+    (without materializing): codes + scale metadata."""
+    import math
+    n = math.prod(shape) if shape else 1
+    itemsize = jnp.dtype(spec.storage_dtype).itemsize
+    if spec.kind == "pow2":
+        return n * itemsize + 4
+    last = shape[-1] if shape else 1
+    b = min(spec.block, max(1, last))
+    nb = -(-last // b)
+    lead = n // max(last, 1)
+    return lead * nb * b * itemsize + lead * nb * 4

@@ -1,8 +1,10 @@
 """AdamW with optional block-wise 8-bit first/second moments.
 
 No optax dependency. The 8-bit state path (Dettmers-style block-wise absmax
-quantization) is on-theme with the paper's low-precision training and is what
-lets deepseek-v2-236B optimizer state fit a 256-chip pod (DESIGN.md §5).
+quantization) is the ``optimizer_moment`` site of the unified quantization
+API: moments are ``numerics.QTensor``s produced by the blockwise codec
+(shape-preserving along the last axis), which is what lets
+deepseek-v2-236B optimizer state fit a 256-chip pod (DESIGN.md §5).
 
 λ ("lambda_*") and integer leaves are excluded from Adam: λ gets the
 closed-form Eq.(4) update, integers (scale exponents) are managed by the
@@ -10,16 +12,23 @@ scale manager.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from ..configs.base import TrainConfig
+from ..numerics import QTensor, QuantSpec, decode, encode
+from ..numerics.codecs import blockwise_geometry
 
-BLOCK = 256
+# the optimizer_moment spec (NumericsPolicy default): blockwise int8 along
+# the last axis. Shape preservation matters at scale: the q8 state then
+# carries the SAME sharding as its parameter, so the optimizer update is
+# fully local. A flat layout forces GSPMD to reshard the whole moment
+# tensor every step (measured 75 GB all-gathers per expert leaf on
+# deepseek-v2 — see EXPERIMENTS.md §Perf iteration 1).
+MOMENT_SPEC = QuantSpec("blockwise", 8, 256, "int8", "per_tensor_max")
+BLOCK = MOMENT_SPEC.block
 
 
 def _is_adam_leaf(path: str, leaf) -> bool:
@@ -35,61 +44,26 @@ def _path_str(kp) -> str:
     return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in kp)
 
 
-def _q8_block(last: int) -> int:
-    """Block size along the last axis (shape-preserving blockwise quant).
-
-    Shape preservation matters at scale: the q8 state then carries the SAME
-    sharding as its parameter, so the optimizer update is fully local. A
-    flat layout forces GSPMD to reshard the whole moment tensor every step
-    (measured 75 GB all-gathers per expert leaf on deepseek-v2 — see
-    EXPERIMENTS.md §Perf iteration 1)."""
-    return min(BLOCK, max(1, last))
-
-
-def _q8_init(x: jax.Array):
+def _q8_init(x: jax.Array) -> QTensor:
     shape = x.shape if x.ndim > 0 else (1,)
-    last = shape[-1]
-    b = _q8_block(last)
-    nb = (last + b - 1) // b
-    return {
-        "q": jnp.zeros(shape[:-1] + (nb * b,), jnp.int8),
-        "scale": jnp.zeros(shape[:-1] + (nb,), jnp.float32),
-    }
+    b, nb, _ = blockwise_geometry(MOMENT_SPEC, shape[-1])
+    return QTensor(jnp.zeros(shape[:-1] + (nb * b,), jnp.int8),
+                   jnp.zeros(shape[:-1] + (nb,), jnp.float32),
+                   MOMENT_SPEC, shape)
 
 
-def _q8_encode(v: jax.Array):
-    v = v.astype(jnp.float32)
-    if v.ndim == 0:
-        v = v[None]
-    last = v.shape[-1]
-    b = _q8_block(last)
-    nb = (last + b - 1) // b
-    pad = nb * b - last
-    if pad:
-        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, pad)])
-    blocks = v.reshape(v.shape[:-1] + (nb, b))
-    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
-    q = jnp.round(blocks / jnp.maximum(scale, 1e-20)[..., None])
-    return {"q": jnp.clip(q, -127, 127).astype(jnp.int8).reshape(
-        v.shape[:-1] + (nb * b,)), "scale": scale}
+def _q8_encode(v: jax.Array) -> QTensor:
+    return encode(v, MOMENT_SPEC)
 
 
-def _q8_decode(st, shape, n):
-    q = st["q"]
-    nb = st["scale"].shape[-1]
-    b = q.shape[-1] // nb
-    blocks = q.astype(jnp.float32).reshape(q.shape[:-1] + (nb, b)) \
-        * st["scale"][..., None]
-    flat = blocks.reshape(q.shape[:-1] + (nb * b,))
-    last = shape[-1] if shape else 1
-    out = flat[..., :last]
-    return out.reshape(shape)
+def _q8_decode(qt: QTensor, shape, n=None):
+    return decode(qt, jnp.float32).reshape(shape)
 
 
 class AdamState(NamedTuple):
     """Moments stored as tuples aligned with the flattened params tree
-    (element = None | f32 array | {"q": int8, "scale": f32} blockwise state).
-    Tuples keep flattening unambiguous in the presence of dict-valued
+    (element = None | f32 array | blockwise-int8 ``numerics.QTensor``).
+    Tuples keep flattening unambiguous in the presence of container-valued
     8-bit states."""
     step: jax.Array
     m: tuple

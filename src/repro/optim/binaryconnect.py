@@ -5,7 +5,9 @@ forward/backward pass sees quantized weights via the fake-quant in
 ``tt_layer.effective_cores``. Eq. (3) is then exactly: SGD/Adam applies the
 gradient (taken w.r.t. the quantized cores, STE) to the full-precision
 buffer; the next forward re-quantizes. This module adds the explicit
-"deploy" quantization used at export, and the λ closed-form update hook.
+"deploy" quantization used at export (the ``tt_factor`` site of the unified
+quantization API, routed through ``core.quant.quantize_store`` ->
+``numerics`` pow2 codec), and the λ closed-form update hook.
 """
 from __future__ import annotations
 

@@ -7,6 +7,11 @@ the data-parallel reduce moves 1/4 the bytes (int8 vs f32) at the cost of a
 residual buffer. Error feedback keeps the scheme unbiased over time
 (Karimireddy et al. 2019).
 
+The quantizer is the ``dp_wire`` site of the unified quantization API:
+each gradient leaf is flattened and round-tripped through the blockwise
+int8 codec (block 1024 — coarser than the optimizer-moment block because
+the wire format amortizes one f32 scale per 1 KiB payload).
+
 Usage (inside the jitted train step, before the optimizer):
     grads_c, residual = compress_decompress(grads, residual)
 XLA then all-reduces the (already quantized-valued) tensors; on real
@@ -18,20 +23,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-BLOCK = 1024
+from ..numerics import QuantSpec, roundtrip
+
+WIRE_SPEC = QuantSpec("blockwise", 8, 1024, "int8", "per_tensor_max")
+BLOCK = WIRE_SPEC.block
 
 
-def _quant_block(v: jax.Array):
-    n = v.size
-    nb = (n + BLOCK - 1) // BLOCK
-    flat = jnp.pad(v.reshape(-1), (0, nb * BLOCK - n)).reshape(nb, BLOCK)
-    scale = jnp.max(jnp.abs(flat), axis=1, keepdims=True) / 127.0
-    q = jnp.round(flat / jnp.maximum(scale, 1e-20))
-    deq = (jnp.clip(q, -127, 127) * scale).reshape(-1)[:n].reshape(v.shape)
-    return deq
-
-
-def compress_decompress(grads, residual):
+def compress_decompress(grads, residual, spec: QuantSpec = WIRE_SPEC):
     """Returns (compressed grads, new residual). residual=None initializes."""
     leaves, treedef = jax.tree_util.tree_flatten(grads)
     if residual is None:
@@ -47,7 +45,7 @@ def compress_decompress(grads, residual):
             new_res.append(r)
             continue
         corrected = g.astype(jnp.float32) + r
-        deq = _quant_block(corrected)
+        deq = roundtrip(corrected.reshape(-1), spec).reshape(g.shape)
         out.append(deq.astype(g.dtype))
         new_res.append(corrected - deq)
     return jax.tree_util.tree_unflatten(treedef, out), tuple(new_res)

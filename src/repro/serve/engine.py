@@ -12,10 +12,12 @@ Numerics contract: in fp (non-quantized) mode the engine's prefill is the
 model's own ``lm_forward`` and its decode runs the exact attend helpers of
 ``models/attention.py`` over the same cached values, so continuous-batched
 greedy decode is token-identical to the static single-request reference
-(asserted by tests/test_serve.py). MoE caveat: GShard capacity routing is
-batch-dependent, so prompt padding (``prefill_bucket > 0``) and inactive
-decode slots can displace real tokens from expert capacity — exact parity
-for MoE needs ``prefill_bucket=0`` and a drop-free capacity factor.
+(asserted by tests/test_serve.py). MoE: inactive decode slots and
+chunked-prefill tail padding are masked out of the router (zero combine
+weight -> they can never win a capacity slot against a real token; see
+``models/moe.py::_route``). The remaining caveat is whole-prompt prefill
+padding (``prefill_bucket > 0``), which runs through the model's own
+``lm_forward`` — exact parity for MoE needs ``prefill_bucket=0``.
 
 Supported archs: every all-attention family in the zoo (dense / MoE, GQA or
 MLA). SSM/hybrid recurrent-state serving and frontend (vision/audio) archs
@@ -23,6 +25,7 @@ are open roadmap items.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass
 from typing import NamedTuple
@@ -31,6 +34,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..numerics import NumericsPolicy
 from ..models import attention as A
 from ..models.common import apply_site, rms_norm
 from ..models.lm import LMDef, embed_tokens, lm_forward, sub_ffn_decode
@@ -57,6 +61,10 @@ class EngineConfig:
                                 # for MoE token-parity: pad tokens would
                                 # compete in GShard capacity routing)
     seed: int = 0
+    policy: "NumericsPolicy | None" = None
+                                # numerics policy: when set, its ``kv_cache``
+                                # site overrides the pool's quantized/bits
+                                # knobs (one owner for the system's numerics)
 
 
 # ---------------------------------------------------------------------------
@@ -105,7 +113,12 @@ class Engine:
         self.lm = lm
         self.params = params
         self.ecfg = ecfg
-        self.pcfg = ecfg.pool
+        pcfg = ecfg.pool
+        if ecfg.policy is not None:
+            kv = ecfg.policy.spec_for("kv_cache")
+            pcfg = dataclasses.replace(pcfg, quantized=ecfg.policy.enable,
+                                       bits=kv.bits)
+        self.pcfg = pcfg
         self.plan = plan or ShardPlan(mesh=None)
         self.pool = KC.init_pool(lm, self.pcfg)
         self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk)
@@ -149,7 +162,10 @@ class Engine:
             kv[name] = KC.gather_slots(dl, ssub[name], table, self.pcfg,
                                        h.dtype)
         x = x + _attend(pp["mixer"], qd, kv, sub, cfg, positions)
-        return sub_ffn_decode(pp, x, sub, cfg, self.plan), new_dsub
+        # inactive slots are masked out of the MoE router: their junk
+        # tokens must not consume expert capacity (ROADMAP item)
+        return sub_ffn_decode(pp, x, sub, cfg, self.plan,
+                              token_mask=active[:, None]), new_dsub
 
     def _decode_impl(self, params, pool, table, lens, active, tokens):
         """One batched decode step. tokens: (B,1); lens/active: (B,).
@@ -183,6 +199,7 @@ class Engine:
         s = tokens.shape[1]
         table_row = table[slot]
         positions = (start + jnp.arange(s))[None]          # (1,S)
+        chunk_mask = (jnp.arange(s) < valid_len)[None]     # (1,S) real tokens
         x = embed_tokens(params, tokens, lm)
 
         def body(x, scan_in):
@@ -203,7 +220,9 @@ class Engine:
                                                table_row[None], self.pcfg,
                                                h.dtype)
                 x = x + _attend(spp["mixer"], qd, kv, sub, cfg, positions)
-                x = sub_ffn_decode(spp, x, sub, cfg, self.plan)
+                # chunk tail padding is masked out of the MoE router
+                x = sub_ffn_decode(spp, x, sub, cfg, self.plan,
+                                   token_mask=chunk_mask)
                 new_d[f"sub_{i}"], new_s[f"sub_{i}"] = nd, ns
             return x, (new_d, new_s)
 

@@ -28,7 +28,15 @@ from dataclasses import dataclass
 import jax
 import jax.numpy as jnp
 
-from ..core.quant import qrange
+from ..numerics import (QTensor, QuantSpec, get_codec,
+                        per_tensor_max_scale_log2, qrange)
+
+
+def _kv_spec(bits: int) -> QuantSpec:
+    """The ``kv_cache`` site: pow-2 int8 codes, per-tensor-max scale chosen
+    at prefill. One constructor so PoolConfig, the scale chooser, and the
+    encode/decode paths can never diverge."""
+    return QuantSpec("pow2", bits, 0, "int8", "per_tensor_max")
 
 
 @dataclass(frozen=True)
@@ -41,6 +49,11 @@ class PoolConfig:
                                 # (0 => num_slots * pages_per_slot, no sharing)
     quantized: bool = False     # int8 pow-2 storage vs model-dtype storage
     bits: int = 8
+
+    @property
+    def spec(self) -> QuantSpec:
+        """The ``kv_cache`` site spec this pool stores under."""
+        return _kv_spec(self.bits)
 
     @property
     def max_len(self) -> int:
@@ -109,33 +122,32 @@ def pool_bytes(pool: dict) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Quantize / dequantize (pow-2 symmetric fixed point, core/quant.py scheme)
+# Quantize / dequantize — the ``kv_cache`` site of the unified quantization
+# API (pow-2 codec of repro.numerics; same grid as core/quant.py)
 # ---------------------------------------------------------------------------
 
 def choose_scale_log2(x: jax.Array, valid: jax.Array, bits: int) -> jax.Array:
-    """Smallest pow-2 step covering max|x| over valid rows.
+    """Smallest pow-2 step covering max|x| over valid rows
+    (``scale_policy="per_tensor_max"``: one scale per layer, from the
+    prompt's K/V range at prefill).
 
     x: (L, S, *feat); valid: (S,) bool. Returns (L,) f32 integer-valued."""
     mask = valid.reshape((1, -1) + (1,) * (x.ndim - 2))
-    maxabs = jnp.max(jnp.abs(x.astype(jnp.float32)) * mask,
-                     axis=tuple(range(1, x.ndim)))
-    _, hi = qrange(bits)
-    return jnp.ceil(jnp.log2(jnp.maximum(maxabs, 1e-8) / hi))
+    return per_tensor_max_scale_log2(x, _kv_spec(bits), valid=mask,
+                                     reduce_axes=tuple(range(1, x.ndim)))
 
 
 def quantize(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
     """fp -> int8 codes; scale_log2 broadcast against x's leading dims."""
-    lo, hi = qrange(bits)
-    step = jnp.exp2(scale_log2).reshape(
-        scale_log2.shape + (1,) * (x.ndim - scale_log2.ndim))
-    q = jnp.clip(jnp.round(x.astype(jnp.float32) / step), lo, hi)
-    return q.astype(jnp.int8)
+    spec = _kv_spec(bits)
+    return get_codec(spec).encode(x, spec, scale_log2).codes
 
 
 def dequantize(q: jax.Array, scale_log2: jax.Array, dtype) -> jax.Array:
-    step = jnp.exp2(scale_log2).reshape(
-        scale_log2.shape + (1,) * (q.ndim - scale_log2.ndim))
-    return (q.astype(jnp.float32) * step).astype(dtype)
+    # decode is bits-independent (codes * 2^scale); the 8-bit default spec
+    # selects the pow2 codec
+    spec = _kv_spec(8)
+    return get_codec(spec).decode(QTensor(q, scale_log2, spec), dtype)
 
 
 # ---------------------------------------------------------------------------

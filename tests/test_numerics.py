@@ -1,0 +1,309 @@
+"""repro.numerics acceptance tests:
+
+(a) reference and Pallas codec backends are BIT-IDENTICAL (codes, decode,
+    fake-quant) on pow2 and blockwise specs, with no caller-side padding,
+(b) NumericsPolicy round-trips through JSON (incl. the QuantConfig
+    back-compat constructor),
+(c) grad-accum with grad_compress=True has the same residual semantics as
+    the non-accum step (the bug this PR fixed),
+(d) MoE router masking: masked (inactive-slot) tokens cannot consume
+    expert capacity.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import numerics as N
+from repro.configs.base import MoEConfig, ModelConfig, QuantConfig, TrainConfig
+
+# ---------------------------------------------------------------------------
+# (a) cross-backend bit-identity
+# ---------------------------------------------------------------------------
+
+POW2_SHAPES = [(7,), (37, 130), (3, 5, 33)]
+
+
+@pytest.mark.parametrize("shape", POW2_SHAPES)
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_pow2_backends_bit_identical(shape, bits):
+    spec = N.QuantSpec("pow2", bits, 0, "int8" if bits <= 8 else "int16",
+                       "fixed")
+    x = jax.random.normal(jax.random.PRNGKey(0), shape) * 5
+    step = jnp.asarray(-3.0)
+    qr = N.encode(x, spec, step, backend="reference")
+    qp = N.encode(x, spec, step, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(qr.codes), np.asarray(qp.codes))
+    np.testing.assert_array_equal(np.asarray(N.decode(qr)),
+                                  np.asarray(N.decode(qp, backend="pallas")))
+    fr = N.fake_quant(x, spec, step, backend="reference")
+    fp = N.fake_quant(x, spec, step, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(fr), np.asarray(fp))
+
+
+@pytest.mark.parametrize("shape,block", [((1000,), 256), ((5, 777), 256),
+                                         ((2, 3, 50), 16), ((4096,), 1024)])
+def test_blockwise_backends_bit_identical(shape, block):
+    spec = N.QuantSpec("blockwise", 8, block, "int8", "per_tensor_max")
+    x = jax.random.normal(jax.random.PRNGKey(1), shape) * 9
+    qr = N.encode(x, spec, backend="reference")
+    qp = N.encode(x, spec, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(qr.codes), np.asarray(qp.codes))
+    np.testing.assert_array_equal(np.asarray(qr.scale), np.asarray(qp.scale))
+    np.testing.assert_array_equal(np.asarray(N.decode(qr)),
+                                  np.asarray(N.decode(qp, backend="pallas")))
+
+
+def test_pallas_fake_quant_has_clipped_ste():
+    spec = N.QuantSpec("pow2", 4)
+    x = jnp.asarray([-0.3, 0.0, 0.4, 50.0, -50.0])
+    g = jax.grad(lambda v: jnp.sum(
+        N.fake_quant(v, spec, jnp.asarray(-4.0), backend="pallas")))(x)
+    # scale 2^-4: representable |x| <= 8*2^-4 = 0.5
+    assert float(g[0]) == 1.0 and float(g[2]) == 1.0
+    assert float(g[3]) == 0.0 and float(g[4]) == 0.0
+
+
+def test_pallas_kernel_pads_internally():
+    """The old kernel asserted exact (bm, bn) multiples; any shape works now."""
+    from repro.kernels.quantize import quantize
+    x = jax.random.normal(jax.random.PRNGKey(2), (37, 130))
+    out = quantize(x, jnp.asarray(-3.0), 8)
+    assert out.shape == x.shape
+    ref = N.fake_quant(x, N.QuantSpec("pow2", 8), jnp.asarray(-3.0))
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_qtensor_nbytes_and_pytree():
+    spec = N.QuantSpec("blockwise", 8, 256)
+    x = jax.random.normal(jax.random.PRNGKey(3), (16, 512))
+    qt = N.encode(x, spec)
+    assert qt.nbytes() == 16 * 512 + 16 * 2 * 4          # codes + scales
+    assert qt.nbytes() < x.nbytes / 3.5
+    # pytree: map/flatten preserve the container and its static aux
+    qt2 = jax.tree.map(lambda a: a, qt)
+    assert isinstance(qt2, N.QTensor) and qt2.spec == spec
+    np.testing.assert_allclose(np.asarray(qt.dequantize()), np.asarray(x),
+                               atol=float(qt.scale.max()) + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# (b) policy JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_policy_json_roundtrip():
+    pol = N.NumericsPolicy(enable=True)
+    assert N.NumericsPolicy.from_json(pol.to_json()) == pol
+    # plain-dict path (what a config file would store)
+    d = json.loads(json.dumps(pol.to_json_dict()))
+    assert N.NumericsPolicy.from_json_dict(d) == pol
+
+
+def test_quant_config_is_policy_constructor():
+    qc = QuantConfig(enable=True, weight_bits=4, act_bits=8, grad_bits=16)
+    pol = qc.policy()
+    assert pol.enable
+    assert pol.spec_for("tt_factor").bits == 4
+    assert pol.spec_for("activation").bits == 8
+    assert pol.spec_for("grad_edge").bits == 16
+    assert pol.spec_for("optimizer_moment").kind == "blockwise"
+    assert pol.spec_for("dp_wire").block == 1024
+    assert pol.spec_for("kv_cache").scale_policy == "per_tensor_max"
+    assert set(pol.managed_sites()) == {"activation", "grad_edge"}
+    assert N.NumericsPolicy.from_json(pol.to_json()) == pol
+
+
+def test_policy_sites_cover_all_known_sites():
+    pol = N.NumericsPolicy()
+    for site in N.SITES:
+        assert pol.spec_for(site) is not None
+    with pytest.raises(KeyError):
+        pol.spec_for("nonexistent")
+
+
+def test_all_sites_share_one_codec_registry():
+    """The acceptance claim: every site's spec resolves to a registered
+    codec on both backends."""
+    pol = N.NumericsPolicy(enable=True)
+    for site in N.SITES:
+        for backend in N.BACKENDS:
+            assert N.get_codec(pol.spec_for(site), backend) is not None
+
+
+# ---------------------------------------------------------------------------
+# (c) grad-accum residual semantics == non-accum step
+# ---------------------------------------------------------------------------
+
+def _tiny_lm():
+    from repro.models import build_lm, init_lm
+    cfg = ModelConfig(name="t", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32")
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    return cfg, lm, params
+
+
+def test_grad_accum_matches_non_accum_with_compression():
+    """n_micro=1 grad-accum must be the SAME update as the plain step:
+    compression applied, residual carried (the fixed bug: it silently
+    dropped both)."""
+    from repro.launch.steps import (init_train_state,
+                                    make_grad_accum_train_step,
+                                    make_train_step)
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_lm()
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, grad_compress=True)
+    plan = ShardPlan(mesh=None)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 64),
+             "labels": jax.random.randint(jax.random.PRNGKey(2), (2, 16), 0, 64)}
+    step = jax.jit(make_train_step(lm, plan, tcfg))
+    astep = jax.jit(make_grad_accum_train_step(lm, plan, tcfg, 1))
+    s0 = init_train_state(params, tcfg)
+    s1, m1 = step(s0, batch)
+    s2, m2 = astep(s0, jax.tree.map(lambda a: a[None], batch))
+    assert s2.residual is not None
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    for a, b in zip(s1.residual, s2.residual):
+        if a is None:
+            assert b is None
+            continue
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-6)
+
+
+def test_grad_accum_error_feedback_accumulates():
+    """Residual must change step over step (error feedback is live) and
+    feed back into the next update."""
+    from repro.launch.steps import init_train_state, make_grad_accum_train_step
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_lm()
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, grad_compress=True)
+    astep = jax.jit(make_grad_accum_train_step(lm, ShardPlan(mesh=None),
+                                               tcfg, 2))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3), (2, 2, 16), 0, 64),
+             "labels": jax.random.randint(jax.random.PRNGKey(4), (2, 2, 16), 0, 64)}
+    state = init_train_state(params, tcfg)
+    state, _ = astep(state, batch)
+    r1 = [np.asarray(r) for r in state.residual if r is not None]
+    state, _ = astep(state, batch)
+    r2 = [np.asarray(r) for r in state.residual if r is not None]
+    assert any(np.abs(a - b).max() > 0 for a, b in zip(r1, r2))
+    assert any(np.abs(r).max() > 0 for r in r2)
+
+
+# ---------------------------------------------------------------------------
+# (d) MoE router masking
+# ---------------------------------------------------------------------------
+
+def test_moe_mask_prevents_capacity_theft():
+    """Junk (masked) tokens must not displace real tokens from expert
+    capacity: with the mask on, the real tokens' outputs are independent
+    of the junk tokens' content."""
+    from repro.models.moe import make_moe, init_moe, moe_forward
+    cfg = ModelConfig(name="m", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+                      # tight capacity (8 slots/expert, 16 tokens wanting
+                      # k=2 experts each) so junk with extreme router
+                      # weights CAN displace real tokens when unmasked
+                      moe=MoEConfig(num_experts=2, top_k=2,
+                                    capacity_factor=0.5))
+    d = make_moe(cfg)
+    p = init_moe(jax.random.PRNGKey(0), d, cfg)
+    b, s = 1, 16
+    x = jax.random.normal(jax.random.PRNGKey(1), (b, s, 32))
+    # half the tokens are "inactive slots" carrying junk
+    mask = jnp.asarray([True] * 8 + [False] * 8)[None]
+    junk_a = x.at[:, 8:].set(100.0 * jax.random.normal(
+        jax.random.PRNGKey(2), (b, 8, 32)))
+    junk_b = x.at[:, 8:].set(50.0 * jax.random.normal(
+        jax.random.PRNGKey(3), (b, 8, 32)))
+
+    out_a, _ = moe_forward(p, junk_a, d, cfg, token_mask=mask)
+    out_b, _ = moe_forward(p, junk_b, d, cfg, token_mask=mask)
+    # real tokens: identical regardless of junk content
+    np.testing.assert_allclose(np.asarray(out_a[:, :8]),
+                               np.asarray(out_b[:, :8]),
+                               rtol=1e-5, atol=1e-5)
+    # masked tokens contribute nothing (zero combine weight)
+    np.testing.assert_allclose(np.asarray(out_a[:, 8:]), 0.0, atol=1e-6)
+
+    # sanity: WITHOUT the mask the big junk steals capacity -> real-token
+    # outputs change with junk content (the pre-fix behavior)
+    noma, _ = moe_forward(p, junk_a, d, cfg)
+    nomb, _ = moe_forward(p, junk_b, d, cfg)
+    assert np.abs(np.asarray(noma[:, :8]) - np.asarray(nomb[:, :8])).max() \
+        > 1e-4
+
+
+def test_moe_all_active_mask_is_identity():
+    """An all-true mask must not change routing (serve fp32 parity)."""
+    from repro.models.moe import make_moe, init_moe, moe_forward
+    cfg = ModelConfig(name="m", num_layers=1, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64, dtype="float32",
+                      moe=MoEConfig(num_experts=4, top_k=2))
+    d = make_moe(cfg)
+    p = init_moe(jax.random.PRNGKey(0), d, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
+    out0, aux0 = moe_forward(p, x, d, cfg)
+    out1, aux1 = moe_forward(p, x, d, cfg,
+                             token_mask=jnp.ones((2, 8), bool))
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(out1))
+    np.testing.assert_allclose(float(aux0), float(aux1), rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# unified-site regression: the five migrated call sites hit the codecs
+# ---------------------------------------------------------------------------
+
+def test_adam_int8_state_is_qtensor():
+    from repro.optim import adam as A
+    p = {"w": jax.random.normal(jax.random.PRNGKey(1), (4, 300))}
+    st = A.init_adam(p, TrainConfig(opt_state_dtype="int8"))
+    (m,) = [m for m in st.m if m is not None]
+    assert isinstance(m, N.QTensor)
+    assert m.spec.kind == "blockwise" and m.spec.block == A.BLOCK
+    # shape-preserving: leading dims match the param's
+    assert m.codes.shape[:-1] == (4,)
+
+
+def test_engine_pool_numerics_follow_policy():
+    """EngineConfig.policy: the kv_cache site owns the pool's numerics."""
+    import repro.configs as C
+    from repro.models import build_lm, init_lm
+    from repro.serve import Engine, EngineConfig, PoolConfig
+    from repro.sharding import ShardPlan
+    cfg = C.get_reduced("internlm2-1.8b").replace(dtype="float32",
+                                                  remat="none")
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    pol = N.NumericsPolicy(enable=True)
+    eng = Engine(lm, params,
+                 EngineConfig(pool=PoolConfig(num_slots=2, quantized=False),
+                              policy=pol), ShardPlan(mesh=None))
+    assert eng.pcfg.quantized and eng.pcfg.bits == \
+        pol.spec_for("kv_cache").bits
+    assert eng.pcfg.spec == pol.spec_for("kv_cache")
+    leaf = next(iter(next(iter(eng.pool["data"].values())).values()))
+    assert leaf.dtype == jnp.int8
+
+
+def test_kv_cache_quant_routes_through_codec():
+    from repro.serve import kv_cache as KC
+    pcfg = KC.PoolConfig(num_slots=2, quantized=True)
+    assert pcfg.spec == N.QuantSpec("pow2", 8, 0, "int8", "per_tensor_max")
+    x = jax.random.normal(jax.random.PRNGKey(0), (3, 8, 4)) * 2
+    valid = jnp.ones((8,), bool)
+    sc = KC.choose_scale_log2(x, valid, 8)
+    codes = KC.quantize(x, sc[:, None], 8)
+    deq = KC.dequantize(codes, sc[:, None], jnp.float32)
+    step = np.exp2(np.asarray(sc)).reshape(3, 1, 1)
+    assert codes.dtype == jnp.int8
+    assert (np.abs(np.asarray(deq) - np.asarray(x)) <= step / 2 + 1e-6).all()
