@@ -73,6 +73,9 @@ def main():
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
     ap.add_argument("--prefill-chunk", type=int, default=0)
+    ap.add_argument("--fused", action="store_true",
+                    help="fused paged-attention decode (per-page in-kernel "
+                         "dequant; MLA sublayers fall back to gather)")
     args = ap.parse_args()
 
     cfg = C.get_reduced(args.arch).replace(dtype="float32", remat="none")
@@ -95,7 +98,8 @@ def main():
         pages_per_slot=-(-horizon // args.page_size) + 1,
         quantized=args.quantized)
     eng = Engine(lm, params,
-                 EngineConfig(pool=pcfg, prefill_chunk=args.prefill_chunk),
+                 EngineConfig(pool=pcfg, prefill_chunk=args.prefill_chunk,
+                              fused_attention=args.fused),
                  plan)
     sp = SamplingParams(temperature=args.temperature, top_k=args.top_k,
                         top_p=args.top_p)

@@ -37,6 +37,24 @@ def group_size(spec: TTMSpec, n: int) -> int:
 # on dead slices into a stable exponential decay).
 LAMBDA_FLOOR = 1e-8
 
+# The absolute floor alone cannot deliver that stability: λ tracks the
+# slice's squared norm (Eq. 4), so by the time λ reaches any fixed absolute
+# floor the pull 2·G/λ has long exceeded the SGD stability limit — the
+# slice overshoots zero, flips sign and *revives* (observed as effective
+# ranks oscillating back to full and the fit degrading late in training).
+# The prior therefore also floors λ RELATIVE to the core's largest λ:
+# slices below PRIOR_REL_FLOOR · max λ are "dead" (the same relative scale
+# ``rank_masks`` prunes at), and their pull saturates at a bounded,
+# monotone exponential decay instead of growing without bound.
+PRIOR_REL_FLOOR = 1e-2
+
+
+def _prior_floor(lam: jax.Array) -> jax.Array:
+    """λ as seen by the prior: floored at max(PRIOR_REL_FLOOR·max λ,
+    LAMBDA_FLOOR) so the dead-slice pull is bounded and scale-free."""
+    return jnp.maximum(lam, jnp.maximum(PRIOR_REL_FLOOR * jnp.max(lam),
+                                        LAMBDA_FLOOR))
+
 
 def init_lambdas(spec: TTMSpec) -> list[jax.Array]:
     """λ_n for n = 0..d-2 (no λ for the last core: R_d == 1)."""
@@ -59,7 +77,7 @@ def prior_loss(cores: Sequence[jax.Array], lambdas: Sequence[jax.Array],
     closed-form on λ."""
     total = jnp.zeros((), jnp.float32)
     for n in range(spec.d - 1):
-        lam = jnp.maximum(jax.lax.stop_gradient(lambdas[n]), LAMBDA_FLOOR)
+        lam = _prior_floor(jax.lax.stop_gradient(lambdas[n]))
         sq = slice_sqnorms(cores[n])
         c = 0.5 * group_size(spec, n)
         total = total + jnp.sum(sq / lam + c * jnp.log(lam))

@@ -12,11 +12,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..numerics.pallas_backend import interpret_mode as _interpret
+from ..numerics.pallas_backend import native_backend
+from . import paged_attention as PA
 from . import ttm_pe1, ttm_pe2, ttm_pe3
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -97,6 +96,40 @@ def quantize_fused(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
     from ..numerics import QuantSpec, fake_quant
     return fake_quant(x, QuantSpec("pow2", bits), step_log2,
                       backend="pallas")
+
+
+def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
+                    kscale: jax.Array, vscale: jax.Array, table: jax.Array,
+                    lens: jax.Array, *, page_size: int, quantized: bool,
+                    impl: str = "auto",
+                    page_chunk: int | None = None) -> jax.Array:
+    """Fused paged-attention decode: per-page int8 dequant + online-softmax
+    attention over each slot's page list (never materializes the fp32 slot
+    view). See ``kernels/paged_attention.py`` for layouts.
+
+    impl: "pallas" (the kernel; compiled on TPU, interpret elsewhere),
+    "jnp" (the same dataflow as a page-scan in XLA), or "auto" — the kernel
+    on TPU (or when JAX_PALLAS_INTERPRET=1 asks for kernel validation), the
+    jnp page-scan on other backends where interpret-mode grid iteration
+    would serialize the hot loop.
+
+    page_chunk (jnp impl only): pages folded per online-softmax step.
+    1 is bit-locked to the kernel's update order; None picks ~256 tokens
+    per step to amortize dispatch overhead off-TPU.
+    """
+    if impl == "auto":
+        impl = "pallas" if native_backend() else "jnp"
+    if impl == "pallas":
+        return PA.paged_attention_kernel(
+            q, kdata, vdata, kscale, vscale, table, lens,
+            page_size=page_size, quantized=quantized, interpret=_interpret())
+    if impl == "jnp":
+        if page_chunk is None:
+            page_chunk = max(1, 256 // page_size)
+        return PA.paged_attention_jnp(
+            q, kdata, vdata, kscale, vscale, table, lens,
+            page_size=page_size, quantized=quantized, page_chunk=page_chunk)
+    raise ValueError(f"unknown paged_attention impl {impl!r}")
 
 
 def ttm_matvec_kernels(cores, x, spec):

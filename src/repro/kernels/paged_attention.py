@@ -1,0 +1,257 @@
+"""Fused paged-attention decode kernel with in-kernel int8 dequantization.
+
+The serve engine's hottest path used to gather every slot's *entire*
+dequantized cache view (``kv_cache.gather_slots``: (B, max_len, *feat) fp32
+per layer per tensor) before attending.  This module fuses the three steps —
+page gather, pow-2 dequantize, attention — into one pass that walks each
+slot's page list and accumulates online-softmax attention per page, so the
+full-precision slot view is never materialized (the paper's §3.2 point that
+low-precision storage only pays off when dequantization lives inside the
+compute path; Tian et al. 2501.06663 make the same argument for transformer
+attention caches).
+
+Two implementations of the same dataflow:
+
+- ``paged_attention_kernel``: the Pallas kernel.  Grid ``(num_slots,
+  pages_per_slot)`` with the page table and length vector as scalar-prefetch
+  operands — the BlockSpec index map chases the slot's page pointers, so
+  each grid step DMAs exactly one int8 K and V page into VMEM, dequantizes
+  with the slot's pow-2 scale in-register, and folds the page into the
+  (m, l, acc) online-softmax state held in VMEM scratch.  Runs compiled on
+  TPU; in interpret mode everywhere else (the differential-test oracle
+  mode — see tests/test_paged_attention.py).
+- ``paged_attention_jnp``: the identical page-walk written as a
+  ``jax.lax.scan`` over pages in plain jnp.  Same per-page dequant, same
+  online-softmax update order, so it is bit-locked against the kernel (the
+  tests assert exact equality).  It is the engine's fused path off-TPU,
+  where interpret-mode grid iteration would serialize poorly.
+
+Numerics contract: per slot the computation is softmax(q·K^T * scale,
+masked to ``pos <= lens[slot]``) @ V with KV heads expanded to the query
+head count — the same math as ``gather_slots`` + ``models/attention.py::
+gqa_attend``, evaluated in f32 with an online (per-page) softmax instead of
+a full-T one.  Greedy decode is token-identical to the gather path; logits
+agree to float-roundoff (asserted differentially).
+
+Layouts (one attention sublayer, one layer of the scanned stack):
+
+- q:        (B, Hq, Dh)   f32 — one decode query per slot
+- k/v data: (P+1, page, Hkv, Dh) int8 codes (quantized pool) or fp values;
+            row ``P`` is the trash page absorbing inactive-slot writes
+- scale:    (B,) f32 per-slot ``scale_log2`` (pow-2 grid, kv_cache site)
+- table:    (B, pages_per_slot) int32 physical page ids (trash when unmapped)
+- lens:     (B,) int32 position of the incoming token (keys at pos <= lens
+            attend; unmapped pages sit entirely above lens, so the mask also
+            excludes trash-page junk for active slots)
+
+TPU alignment note: compiled runs want Dh a multiple of 128 and page a
+multiple of 8 (f32 sublane); the interpret path takes any shape.  The
+wrapper in ``kernels/ops.py`` picks the implementation and leaves the pool
+layout untouched — padding the pool per step would re-materialize exactly
+the traffic this kernel exists to avoid.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(page, Hkv, Dh) -> (page, Hkv*groups, Dh), repeating each KV head
+    ``groups`` times consecutively (matches ``gqa_attend``'s (hkv, g) query
+    grouping; broadcast+reshape instead of jnp.repeat for TPU lowering)."""
+    if groups == 1:
+        return x
+    pg, hkv, dh = x.shape
+    return jnp.broadcast_to(x[:, :, None, :], (pg, hkv, groups, dh)).reshape(
+        pg, hkv * groups, dh)
+
+
+def _online_update(m, l, acc, s, v):
+    """One online-softmax step: fold scores s (Hq, page) and values
+    v (page, Hq, Dh) into the running (m (Hq,1), l (Hq,1), acc (Hq,Dh))."""
+    m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m - m_new)
+    l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc * corr + jnp.einsum("hp,phd->hd", p, v,
+                                      preferred_element_type=jnp.float32)
+    return m_new, l_new, acc_new
+
+
+def _page_scores(q, k, page_idx, page_size, length, scale):
+    """Masked scores of one page. q (Hq, Dh) f32, k (page, Hq, Dh) f32."""
+    s = jnp.einsum("hd,phd->hp", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = page_idx * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+    return jnp.where(pos <= length, s, NEG_INF)
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernel
+# ---------------------------------------------------------------------------
+
+def _pa_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+               m_ref, l_ref, acc_ref, *, page_size: int, num_pages: int,
+               quantized: bool, scale: float, groups: int):
+    b, p = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                    # (Hq, Dh)
+    k = k_ref[0]                                        # (page, Hkv, Dh)
+    v = v_ref[0]
+    if quantized:
+        # in-kernel pow-2 dequant: one multiply per element, straight from
+        # the int8 page in VMEM — no fp32 page ever round-trips through HBM
+        k = k.astype(jnp.float32) * jnp.exp2(ks_ref[b])
+        v = v.astype(jnp.float32) * jnp.exp2(vs_ref[b])
+    else:
+        k = k.astype(jnp.float32)
+        v = v.astype(jnp.float32)
+    k = _expand_kv(k, groups)
+    v = _expand_kv(v, groups)
+    s = _page_scores(q, k, p, page_size, lens_ref[b], scale)
+    m_new, l_new, acc_new = _online_update(m_ref[...], l_ref[...],
+                                           acc_ref[...], s, v)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(p == num_pages - 1)
+    def _emit():
+        o_ref[0] = (acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
+                           kscale: jax.Array, vscale: jax.Array,
+                           table: jax.Array, lens: jax.Array, *,
+                           page_size: int, quantized: bool,
+                           interpret: bool = False) -> jax.Array:
+    """Fused paged attention via Pallas. Shapes per module docstring;
+    returns (B, Hq, Dh) in q.dtype."""
+    b, hq, dh = q.shape
+    pp = table.shape[1]
+    hkv = kdata.shape[2]
+    assert hq % hkv == 0, (hq, hkv)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # page table + length vector
+        grid=(b, pp),
+        in_specs=[
+            pl.BlockSpec((1, hq, dh), lambda bi, pi, tab, ln: (bi, 0, 0)),
+            # the page-pointer chase: block (pi of slot bi) is physical page
+            # tab[bi, pi] — unmapped entries point at the trash page, whose
+            # positions all sit above lens[bi] and mask to NEG_INF
+            pl.BlockSpec((1, page_size, hkv, dh),
+                         lambda bi, pi, tab, ln: (tab[bi, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page_size, hkv, dh),
+                         lambda bi, pi, tab, ln: (tab[bi, pi], 0, 0, 0)),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, hq, dh),
+                               lambda bi, pi, tab, ln: (bi, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((hq, 1), jnp.float32),           # running max
+            pltpu.VMEM((hq, 1), jnp.float32),           # running denom
+            pltpu.VMEM((hq, dh), jnp.float32),          # running numerator
+        ],
+    )
+    kern = functools.partial(
+        _pa_kernel, page_size=page_size, num_pages=pp, quantized=quantized,
+        scale=1.0 / math.sqrt(dh), groups=hq // hkv)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        interpret=interpret,
+    )(table, lens, q, kdata, vdata,
+      jnp.asarray(kscale, jnp.float32), jnp.asarray(vscale, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# jnp page-scan — the same dataflow in XLA (engine fallback off-TPU)
+# ---------------------------------------------------------------------------
+
+def paged_attention_jnp(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
+                        kscale: jax.Array, vscale: jax.Array,
+                        table: jax.Array, lens: jax.Array, *,
+                        page_size: int, quantized: bool,
+                        page_chunk: int = 1) -> jax.Array:
+    """Page-walk online-softmax attention as a ``lax.scan`` over the page
+    axis, in plain jnp.  Per step it loads ``page_chunk`` int8 pages per
+    slot, dequantizes, and folds them into the (m, l, acc) state.  With
+    ``page_chunk=1`` this is the kernel's exact per-page update order (the
+    bit-lock the differential tests assert); larger chunks amortize the
+    scan's dispatch overhead on non-TPU backends while peak residency stays
+    bounded by the chunk — the (B, max_len, *feat) fp32 slot view is never
+    materialized either way.  KV heads are never expanded: scores and
+    values use grouped einsums over the (Hkv, g) query layout."""
+    b, hq, dh = q.shape
+    pp = table.shape[1]
+    hkv = kdata.shape[2]
+    g = hq // hkv
+    scale = 1.0 / math.sqrt(dh)
+    c = max(1, min(page_chunk, pp))
+    nsteps = -(-pp // c)
+    # rebalance the chunk so tail padding stays minimal (36 pages at chunk
+    # 16 would pad to 48 — 33% wasted positions; balanced: 3 chunks of 12,
+    # zero pad). page_chunk=1 is unaffected (nsteps == pp), preserving the
+    # bit-lock against the kernel.
+    c = -(-pp // nsteps)
+    if nsteps * c != pp:
+        # pad the logical page axis with trash-page pointers; their
+        # positions sit above every slot's length and mask to NEG_INF
+        trash = kdata.shape[0] - 1
+        table = jnp.pad(table, ((0, 0), (0, nsteps * c - pp)),
+                        constant_values=trash)
+    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh)
+    ks = jnp.exp2(jnp.asarray(kscale, jnp.float32))
+    vs = jnp.exp2(jnp.asarray(vscale, jnp.float32))
+
+    def body(carry, step):
+        m, l, acc = carry
+        pages = jax.lax.dynamic_slice_in_dim(table, step * c, c, axis=1)
+        k = kdata[pages]                        # (B, c, page, Hkv, Dh)
+        v = vdata[pages]
+        if quantized:
+            k = k.astype(jnp.float32) * ks[:, None, None, None, None]
+            v = v.astype(jnp.float32) * vs[:, None, None, None, None]
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        k = k.reshape(b, c * page_size, hkv, dh)
+        v = v.reshape(b, c * page_size, hkv, dh)
+        s = jnp.einsum("bhgd,bphd->bhgp", qf, k,
+                       preferred_element_type=jnp.float32) * scale
+        pos = step * (c * page_size) + jnp.arange(c * page_size)
+        s = jnp.where(pos[None, None, None, :] <= lens[:, None, None, None],
+                      s, NEG_INF)
+        s = s.reshape(b, hq, c * page_size)
+        m_new = jnp.maximum(m, jnp.max(s, axis=2, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=2, keepdims=True)
+        acc_new = acc * corr + jnp.einsum(
+            "bhgp,bphd->bhgd", p.reshape(b, hkv, g, c * page_size), v,
+            preferred_element_type=jnp.float32).reshape(b, hq, dh)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, hq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hq, 1), jnp.float32)
+    a0 = jnp.zeros((b, hq, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nsteps))
+    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)

@@ -80,16 +80,20 @@ def site_prior_loss(params: dict, site: SiteDef, cfg: ModelConfig) -> jax.Array:
     spec = site.spec
     if spec.d < 2 or not cfg.tt.rank_adapt:
         return jnp.zeros((), jnp.float32)
-    from ..core.rank_adapt import LAMBDA_FLOOR
+    from ..core.rank_adapt import LAMBDA_FLOOR, PRIOR_REL_FLOOR
     total = jnp.zeros((), jnp.float32)
     for n in range(spec.d - 1):
         core = params[f"core_{n}"].astype(jnp.float32)
-        lam = jnp.maximum(
-            jax.lax.stop_gradient(params[f"lambda_{n}"]).astype(jnp.float32),
-            LAMBDA_FLOOR)
+        lam = jax.lax.stop_gradient(params[f"lambda_{n}"]).astype(jnp.float32)
         # fold any stacked leading axes into the slice norms
         core4 = core.reshape((-1,) + core.shape[-4:][-4:]) if core.ndim > 4 else core[None]
         lam2 = lam.reshape((-1, lam.shape[-1])) if lam.ndim > 1 else lam[None]
+        # dead-slice pull saturates at the per-layer relative floor (see
+        # core/rank_adapt.py::_prior_floor: an absolute floor alone lets
+        # 2·G/λ blow past the SGD stability limit and revive pruned slices)
+        lam2 = jnp.maximum(lam2, jnp.maximum(
+            PRIOR_REL_FLOOR * jnp.max(lam2, axis=-1, keepdims=True),
+            LAMBDA_FLOOR))
         sq = jnp.sum(jnp.square(core4), axis=(1, 2, 3))        # (stack, R_n)
         c = 0.5 * (1 + spec.ranks[n] * spec.i_dims[n] * spec.j_dims[n])
         total = total + jnp.sum(sq / lam2 + c * jnp.log(lam2))

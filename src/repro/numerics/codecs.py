@@ -101,7 +101,13 @@ class Pow2Reference:
 
     def fake_quant(self, x: jax.Array, spec: QuantSpec,
                    scale: jax.Array) -> jax.Array:
-        return pow2_fake_quant(x, scale, spec.bits)
+        # _bcast keeps the codec API's one scale convention across all
+        # three ops: non-scalar scales broadcast against x's LEADING dims
+        # (encode/decode semantics), not numpy trailing alignment — so a
+        # per-layer (L, 1) scale means the same thing everywhere. Scalars
+        # are unchanged (core/quant.py's QAT grid stays bit-identical).
+        return pow2_fake_quant(x, _bcast(jnp.asarray(scale), x.ndim),
+                               spec.bits)
 
 
 # ---------------------------------------------------------------------------

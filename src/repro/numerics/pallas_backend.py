@@ -14,13 +14,20 @@ is also why the backend is bit-identical to the reference codec (asserted
 by tests/test_numerics.py).
 
 Scale handling: the fused kernels take one scalar ``scale_log2`` through
-SMEM (per-tensor pow-2 scale, the §3.2 scheme). Calls with a non-scalar
-scale array (e.g. the KV pool's per-(layer, slot) scales) fall back to the
-reference codec — vectorized multi-scale kernels are a perf follow-up.
+SMEM (per-tensor pow-2 scale, the §3.2 scheme) OR a *multi-scale* array
+following the leading-dim broadcast convention of ``codecs._bcast`` — one
+scale per leading index, e.g. the KV pool's per-(layer, slot) scale arrays.
+Multi-scale calls collapse to a (rows, cols) layout with one scale per row
+and run a vectorized row-scale kernel (the per-page dequant datapath of the
+fused paged-attention kernel, exposed as a standalone codec).  Only scale
+shapes that do not broadcast against the leading dims fall back to the
+reference codec; ``fallback_count()`` lets tests assert a path stayed
+native (tests/test_numerics.py pins every KV-pool shape to zero fallbacks).
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -31,9 +38,46 @@ from .codecs import (Pow2Reference, BlockwiseReference, _p2fq_bwd, _p2fq_fwd,
                      register_codec)
 from .spec import QTensor, QuantSpec, qrange
 
+# Count of calls that fell back to the reference codec because the scale
+# array did not fit a kernel layout (incremented at trace time; tests
+# reset + assert zero around pool-shaped calls).
+_FALLBACKS = 0
 
-def _interpret() -> bool:
+
+def fallback_count() -> int:
+    return _FALLBACKS
+
+
+def reset_fallback_count() -> None:
+    global _FALLBACKS
+    _FALLBACKS = 0
+
+
+def _note_fallback() -> None:
+    global _FALLBACKS
+    _FALLBACKS += 1
+
+
+def interpret_mode() -> bool:
+    """Pallas interpret-mode switch shared by every kernel call site
+    (kernels/ops.py and this backend): JAX_PALLAS_INTERPRET=1 forces
+    interpret (the CI kernel-validation mode); otherwise interpret
+    everywhere but TPU."""
+    if os.environ.get("JAX_PALLAS_INTERPRET", "") == "1":
+        return True
     return jax.default_backend() != "tpu"
+
+
+def native_backend() -> bool:
+    """True where Pallas kernels are the preferred lowering: a TPU backend
+    (compiled), or JAX_PALLAS_INTERPRET=1 explicitly asking for kernel
+    validation. One predicate so the codec, the pool, and the kernel
+    wrapper can never route differently for the same configuration."""
+    return (jax.default_backend() == "tpu"
+            or os.environ.get("JAX_PALLAS_INTERPRET", "") == "1")
+
+
+_interpret = interpret_mode
 
 
 def _blk(dim: int, pref: int, floor: int) -> int:
@@ -115,6 +159,66 @@ def _flat_call(kernel, x: jax.Array, step_log2, out_dtype) -> jax.Array:
     return out.reshape(-1)[:n].reshape(shape)
 
 
+# ---- multi-scale (one pow-2 scale per leading index) ----------------------
+
+def _rowwise(x: jax.Array, scale) -> tuple[jax.Array, jax.Array] | None:
+    """View (x, scale) as (rows, cols) with one scale per row.
+
+    Accepts any scale following the ``codecs._bcast`` convention: after
+    stripping trailing length-1 dims, ``scale.shape`` must broadcast against
+    the same number of *leading* dims of ``x`` (each dim equal or 1).
+    Returns (x2d, scale_row) or None when the convention doesn't hold
+    (caller falls back to the reference codec)."""
+    scale = jnp.asarray(scale)
+    sh = list(scale.shape)
+    while sh and sh[-1] == 1:
+        sh.pop()
+    if not sh or len(sh) > x.ndim:
+        return None
+    lead = x.shape[:len(sh)]
+    if any(s not in (1, d) for s, d in zip(sh, lead)):
+        return None
+    rows = 1
+    for d in lead:
+        rows *= d
+    srow = jnp.broadcast_to(scale.reshape(sh), lead).reshape(rows)
+    return x.reshape(rows, -1), srow
+
+
+def _p2_enc_rows_kernel(x_ref, s_ref, o_ref, *, bits: int):
+    step = jnp.exp2(s_ref[...].astype(jnp.float32))     # (bm, 1) per-row
+    lo, hi = qrange(bits)
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.clip(jnp.round(x / step), lo, hi).astype(o_ref.dtype)
+
+
+def _p2_dec_rows_kernel(q_ref, s_ref, o_ref):
+    step = jnp.exp2(s_ref[...].astype(jnp.float32))
+    o_ref[...] = (q_ref[...].astype(jnp.float32) * step).astype(o_ref.dtype)
+
+
+def _rowscale_call(kernel, x2d: jax.Array, srow: jax.Array,
+                   out_dtype) -> jax.Array:
+    """Grid-tiled pass with one f32 scale per row delivered as a (bm, 1)
+    VMEM block (same layout as the blockwise decode kernel)."""
+    r, c = x2d.shape
+    bm = _blk(r, 256, 8)
+    bn = _blk(c, 256, 128)
+    xp = _pad2d(x2d, bm, bn)
+    sp = _pad2d(srow.astype(jnp.float32).reshape(r, 1), bm, 1)
+    mp, np_ = xp.shape
+    out = pl.pallas_call(
+        kernel,
+        grid=(mp // bm, np_ // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+                  pl.BlockSpec((bm, 1), lambda i, j: (i, 0))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        interpret=_interpret(),
+    )(xp, sp)
+    return out[:r, :c]
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _p2_fake_quant_pallas(x, scale_log2, bits):
     return _flat_call(functools.partial(_p2_fq_kernel, bits=bits), x,
@@ -137,19 +241,40 @@ class Pow2Pallas(Pow2Reference):
         return jnp.ndim(scale) == 0 or getattr(scale, "size", 2) == 1
 
     def encode(self, x, spec: QuantSpec, scale):
-        if not self._scalar(scale):
+        if self._scalar(scale):
+            codes = _flat_call(
+                functools.partial(_p2_enc_kernel, bits=spec.bits),
+                x, scale, spec.jnp_storage)
+            return QTensor(codes, jnp.asarray(scale), spec, x.shape)
+        rw = _rowwise(jnp.asarray(x), scale)
+        if rw is None:
+            _note_fallback()
             return super().encode(x, spec, scale)
-        codes = _flat_call(functools.partial(_p2_enc_kernel, bits=spec.bits),
-                           x, scale, spec.jnp_storage)
-        return QTensor(codes, jnp.asarray(scale), spec, x.shape)
+        x2d, srow = rw
+        codes = _rowscale_call(
+            functools.partial(_p2_enc_rows_kernel, bits=spec.bits),
+            x2d, srow, spec.jnp_storage)
+        return QTensor(codes.reshape(x.shape), jnp.asarray(scale), spec,
+                       x.shape)
 
     def decode(self, qt: QTensor, dtype=jnp.float32):
-        if not self._scalar(qt.scale):
+        if self._scalar(qt.scale):
+            return _flat_call(_p2_dec_kernel, qt.codes, qt.scale, dtype)
+        rw = _rowwise(qt.codes, qt.scale)
+        if rw is None:
+            _note_fallback()
             return super().decode(qt, dtype)
-        return _flat_call(_p2_dec_kernel, qt.codes, qt.scale, dtype)
+        q2d, srow = rw
+        out = _rowscale_call(_p2_dec_rows_kernel, q2d, srow, dtype)
+        return out.reshape(qt.codes.shape)
 
     def fake_quant(self, x, spec: QuantSpec, scale):
         if not self._scalar(scale):
+            # non-scalar fake-quant stays on the reference path (same
+            # leading-dim broadcast semantics as encode/decode via _bcast;
+            # no call site needs a fused multi-scale STE kernel yet — the
+            # KV pool only encodes/decodes)
+            _note_fallback()
             return super().fake_quant(x, spec, scale)
         return _p2_fake_quant_pallas(x, scale, spec.bits)
 

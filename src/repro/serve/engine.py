@@ -65,6 +65,15 @@ class EngineConfig:
                                 # numerics policy: when set, its ``kv_cache``
                                 # site overrides the pool's quantized/bits
                                 # knobs (one owner for the system's numerics)
+    fused_attention: bool = False
+                                # decode attends via the fused paged-
+                                # attention kernel (per-page in-kernel int8
+                                # dequant + online softmax) instead of
+                                # gather_slots + attend. GQA sublayers only;
+                                # MLA sublayers keep the gather reference
+                                # (fused MLA is an open roadmap item)
+    fused_impl: str = "auto"    # "auto" | "pallas" | "jnp" — see
+                                # kernels/ops.py::paged_attention
 
 
 # ---------------------------------------------------------------------------
@@ -149,19 +158,37 @@ class Engine:
         self._sample_jit = jax.jit(sample_tokens)
 
     # ---- jitted step bodies -------------------------------------------
+    def _fused_for(self, sub) -> bool:
+        """Fused-kernel eligibility of one sublayer (the fallback matrix:
+        GQA/MQA/MHA fused; MLA latent attention stays on the gather
+        reference — its absorbed-weight einsums need a dedicated kernel)."""
+        return self.ecfg.fused_attention and sub.mixer_kind == "attn_gqa"
+
     def _sub_decode(self, pp, x, dsub, ssub, table, lens, active, sub):
         cfg = self.lm.cfg
         h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
         positions = A.len_positions(lens, x.shape[0])
         qd, newd = _project(pp["mixer"], h, sub, cfg, positions)
-        new_dsub, kv = {}, {}
-        for name, new in newd.items():
-            dl = KC.append_token(dsub[name], ssub[name], new, table, lens,
-                                 active, self.pcfg)
-            new_dsub[name] = dl
-            kv[name] = KC.gather_slots(dl, ssub[name], table, self.pcfg,
-                                       h.dtype)
-        x = x + _attend(pp["mixer"], qd, kv, sub, cfg, positions)
+        new_dsub = {name: KC.append_token(dsub[name], ssub[name], new, table,
+                                          lens, active, self.pcfg)
+                    for name, new in newd.items()}
+        if self._fused_for(sub):
+            # fused path: attend straight off the int8 pages — per-page
+            # dequant + online softmax inside the kernel, no gathered view
+            d = sub.mixer
+            b = x.shape[0]
+            attn = KC.fused_attend(new_dsub["k"], new_dsub["v"], ssub["k"],
+                                   ssub["v"], qd["q"][:, 0], table, lens,
+                                   self.pcfg, impl=self.ecfg.fused_impl)
+            attn = attn[:, :d.real_heads].reshape(b, 1,
+                                                  d.real_heads * d.head_dim)
+            out = apply_site(pp["mixer"]["o"], attn, d.o, cfg)
+        else:
+            kv = {name: KC.gather_slots(new_dsub[name], ssub[name], table,
+                                        self.pcfg, h.dtype)
+                  for name in new_dsub}
+            out = _attend(pp["mixer"], qd, kv, sub, cfg, positions)
+        x = x + out
         # inactive slots are masked out of the MoE router: their junk
         # tokens must not consume expert capacity (ROADMAP item)
         return sub_ffn_decode(pp, x, sub, cfg, self.plan,

@@ -32,6 +32,17 @@ from ..numerics import (QTensor, QuantSpec, get_codec,
                         per_tensor_max_scale_log2, qrange)
 
 
+def codec_backend() -> str:
+    """Codec backend for the pool's encode/decode: the fused Pallas
+    multi-scale kernels where they run natively (TPU, or forced kernel
+    validation via JAX_PALLAS_INTERPRET=1), the jnp reference elsewhere —
+    the two are bit-identical (tests/test_numerics.py), this only picks the
+    faster lowering. (Deferred import: the pallas backend only loads when
+    it is actually the selected lowering.)"""
+    from ..numerics.pallas_backend import native_backend
+    return "pallas" if native_backend() else "reference"
+
+
 def _kv_spec(bits: int) -> QuantSpec:
     """The ``kv_cache`` site: pow-2 int8 codes, per-tensor-max scale chosen
     at prefill. One constructor so PoolConfig, the scale chooser, and the
@@ -138,16 +149,19 @@ def choose_scale_log2(x: jax.Array, valid: jax.Array, bits: int) -> jax.Array:
 
 
 def quantize(x: jax.Array, scale_log2: jax.Array, bits: int) -> jax.Array:
-    """fp -> int8 codes; scale_log2 broadcast against x's leading dims."""
+    """fp -> int8 codes; scale_log2 broadcast against x's leading dims.
+    On the native-kernel backend this is the fused multi-scale encode (the
+    pool's scatter-on-append quantizes in one Pallas pass)."""
     spec = _kv_spec(bits)
-    return get_codec(spec).encode(x, spec, scale_log2).codes
+    return get_codec(spec, codec_backend()).encode(x, spec, scale_log2).codes
 
 
 def dequantize(q: jax.Array, scale_log2: jax.Array, dtype) -> jax.Array:
     # decode is bits-independent (codes * 2^scale); the 8-bit default spec
     # selects the pow2 codec
     spec = _kv_spec(8)
-    return get_codec(spec).decode(QTensor(q, scale_log2, spec), dtype)
+    return get_codec(spec, codec_backend()).decode(
+        QTensor(q, scale_log2, spec), dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -168,6 +182,29 @@ def gather_slots(data_l: jax.Array, scale_l: jax.Array, table: jax.Array,
         return dequantize(g, scale_l.reshape((b,) + (1,) * (g.ndim - 1)),
                           dtype)
     return g.astype(dtype)
+
+
+def fused_attend(kdata_l: jax.Array, vdata_l: jax.Array, kscale_l: jax.Array,
+                 vscale_l: jax.Array, q: jax.Array, table: jax.Array,
+                 lens: jax.Array, pcfg: PoolConfig,
+                 impl: str = "auto") -> jax.Array:
+    """GQA decode attention straight off the paged pool — the fused
+    alternative to ``gather_slots`` + ``models/attention.py::gqa_attend``.
+
+    The pool's device layout IS the kernel's: ``kdata_l``/``vdata_l`` are
+    one layer's (P+1, page, Hkv, Dh) page array (row P = trash page),
+    ``table`` the (B, pages_per_slot) page-pointer rows, ``kscale_l``/
+    ``vscale_l`` the (B,) per-slot pow-2 scales, ``lens`` the (B,) incoming
+    token positions.  The kernel walks each slot's page list, dequantizes
+    int8 pages in-kernel, and accumulates online-softmax attention per page
+    — the (B, max_len, *feat) fp32 slot view is never materialized.
+
+    q: (B, Hq, Dh). Returns (B, Hq, Dh) in q.dtype.
+    """
+    from ..kernels.ops import paged_attention
+    return paged_attention(q, kdata_l, vdata_l, kscale_l, vscale_l,
+                           table, lens, page_size=pcfg.page_size,
+                           quantized=pcfg.quantized, impl=impl)
 
 
 def append_token(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,

@@ -1,0 +1,142 @@
+"""Randomized scheduler/pool walker asserting the paged pool's isolation
+invariants (shared by the hypothesis property test in test_property.py and
+the deterministic CI sweep in test_serve.py).
+
+The walker replays a random submit / admit / decode-append / retire /
+preempt sequence against a real ``Scheduler`` plus a one-layer,
+one-feature device pool, writing a unique per-request sentinel value at
+every cache position a request owns.  After every op it checks:
+
+- **page accounting**: slots' page lists are pairwise disjoint and disjoint
+  from the free list; each page-table row maps only the slot's own pages or
+  the trash page;
+- **read isolation**: gathering a slot's view returns exactly its own
+  sentinel at every written position — a slot can never read another slot's
+  pages (sentinels are unique per request);
+- **write isolation**: appends for inactive/retired slots land on the trash
+  page only (no other physical page changes).
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serve import kv_cache as KC
+from repro.serve.kv_cache import PoolConfig
+from repro.serve.scheduler import Request, Scheduler
+
+
+def _sentinel(rid: int) -> float:
+    return float(rid % 10_000 + 1)
+
+
+def _check_accounting(sched: Scheduler, pcfg: PoolConfig) -> None:
+    owned = [set(p) for p in sched.slot_pages]
+    for i in range(len(owned)):
+        for j in range(i + 1, len(owned)):
+            assert not (owned[i] & owned[j]), (i, j, owned)
+    free = set(sched.alloc._free)
+    all_owned = set().union(*owned) if owned else set()
+    assert not (free & all_owned), (free, all_owned)
+    for s in range(pcfg.num_slots):
+        row = set(int(p) for p in sched.page_table[s])
+        assert row <= owned[s] | {pcfg.trash_page}, (s, row, owned[s])
+
+
+def _check_read_isolation(sched, pcfg, data, scale, extent) -> None:
+    view = np.asarray(KC.gather_slots(
+        data, scale, jnp.asarray(sched.page_table), pcfg, jnp.float32))
+    for s, st in enumerate(sched.slots):
+        if st is None:
+            continue
+        e = extent[s]
+        want = _sentinel(st.req.rid)
+        got = view[s, :e, 0]
+        assert (got == want).all(), (s, st.req.rid, got, want)
+
+
+def _check_write_isolation(sched, pcfg, data, scale) -> None:
+    """A write batch with every slot inactive must only touch the trash
+    page (retired rows map to trash; the active mask redirects the rest)."""
+    before = np.asarray(data)
+    after = np.asarray(KC.append_token(
+        data, scale, jnp.full((pcfg.num_slots, 1, 1), 999.0),
+        jnp.asarray(sched.page_table),
+        jnp.zeros((pcfg.num_slots,), jnp.int32),
+        jnp.zeros((pcfg.num_slots,), bool), pcfg))
+    assert (after[:pcfg.trash_page] == before[:pcfg.trash_page]).all()
+
+
+def run_pool_walk(seed: int, steps: int = 40) -> None:
+    rng = np.random.RandomState(seed)
+    pcfg = PoolConfig(num_slots=3, page_size=4, pages_per_slot=4,
+                      num_pages=int(rng.choice([8, 10, 12])),
+                      quantized=False)
+    sched = Scheduler(pcfg)
+    data = jnp.zeros((pcfg.total_pages + 1, pcfg.page_size, 1), jnp.float32)
+    scale = jnp.zeros((pcfg.num_slots,), jnp.float32)
+    extent = [0] * pcfg.num_slots       # written positions per slot
+
+    def retire_done(slot):
+        if sched.slots[slot] is not None and sched.slots[slot].done():
+            sched.retire(slot)
+            extent[slot] = 0
+
+    for _ in range(steps):
+        op = rng.choice(["submit", "admit", "decode", "retire", "preempt"])
+        if op == "submit" and len(sched.queue) < 4:
+            sched.submit(Request(prompt=[1] * int(rng.randint(1, 9)),
+                                 max_new_tokens=int(rng.randint(1, 6))))
+        elif op == "admit":
+            adm = sched.try_admit()
+            if adm is not None:
+                slot, st = adm
+                # prefill: write the whole prompt, then sample one token
+                # (mirrors the engine: the sampled token is not yet cached)
+                vals = jnp.full((st.prompt_len, 1),
+                                _sentinel(st.req.rid), jnp.float32)
+                data, scale = KC.write_chunk(
+                    data, scale, vals,
+                    jnp.asarray(sched.page_table[slot]), jnp.int32(0),
+                    jnp.int32(st.prompt_len), jnp.int32(slot), pcfg)
+                extent[slot] = st.prompt_len
+                st.generated.append(7)
+                st.last_token = 7
+                retire_done(slot)
+        elif op == "decode":
+            for slot in range(pcfg.num_slots):
+                if sched.slots[slot] is None:
+                    continue
+                while not sched.ensure_page(slot):
+                    evicted = sched.preempt_youngest()
+                    assert evicted is not None, "pool exhausted"
+                    extent[evicted] = 0
+                    if evicted == slot:
+                        break
+            active = sched.active_mask()
+            if not active.any():
+                continue
+            new = jnp.asarray([[[_sentinel(s.req.rid) if s else 0.0]]
+                               for s in sched.slots], jnp.float32)
+            data = KC.append_token(
+                data, scale, new, jnp.asarray(sched.page_table),
+                jnp.asarray(sched.lens_vector()), jnp.asarray(active), pcfg)
+            for slot, st in enumerate(sched.slots):
+                if st is None:
+                    continue
+                extent[slot] = st.next_pos + 1
+                st.generated.append(7)
+                st.last_token = 7
+                retire_done(slot)
+        elif op == "retire":
+            live = [i for i, s in enumerate(sched.slots) if s is not None]
+            if live:
+                slot = int(rng.choice(live))
+                sched.retire(slot)      # early EOS
+                extent[slot] = 0
+        elif op == "preempt":
+            evicted = sched.preempt_youngest()
+            if evicted is not None:
+                extent[evicted] = 0
+
+        _check_accounting(sched, pcfg)
+        _check_read_isolation(sched, pcfg, data, scale, extent)
+    _check_write_isolation(sched, pcfg, data, scale)

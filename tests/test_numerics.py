@@ -56,6 +56,101 @@ def test_blockwise_backends_bit_identical(shape, block):
                                   np.asarray(N.decode(qp, backend="pallas")))
 
 
+# Every (data, scale) layout the KV pool feeds the pow2 codec (see
+# serve/kv_cache.py): write_prefill (L, S, *feat) w/ per-layer (L, 1)
+# scales, append_token (B, *feat) w/ (B, 1...) scales, gather_slots
+# (B, max_len, *feat) w/ (B, 1...) scales; feat is (Hkv, Dh) for GQA and
+# (rank,) / (rope,) for MLA. Plus a (L, S) per-(layer, slot) grid.
+KV_POOL_SCALE_SHAPES = [
+    ((3, 24, 2, 8), (3, 1)),            # write_prefill, GQA feat
+    ((3, 24, 16), (3, 1)),              # write_prefill, MLA c_kv feat
+    ((4, 2, 8), (4, 1, 1)),             # append_token, GQA feat
+    ((4, 16), (4, 1)),                  # append_token, MLA feat
+    ((4, 32, 2, 8), (4, 1, 1, 1)),      # gather/decode, GQA feat
+    ((4, 32, 16), (4, 1, 1)),           # gather/decode, MLA feat
+    ((3, 5, 2, 8, 4), (3, 5)),          # per-(layer, slot) scale grid
+]
+
+
+@pytest.mark.parametrize("xshape,sshape", KV_POOL_SCALE_SHAPES)
+def test_pow2_multiscale_bit_identity_no_fallback(xshape, sshape):
+    """The vectorized multi-scale Pallas pow2 kernels are BIT-identical to
+    the reference for every KV-pool scale layout — and none of these calls
+    may take the reference fallback (the gap this closes: non-scalar scales
+    used to silently drop to the reference codec)."""
+    from repro.numerics import pallas_backend as PB
+    spec = N.QuantSpec("pow2", 8, 0, "int8", "per_tensor_max")
+    x = jax.random.normal(jax.random.PRNGKey(5), xshape) * 4
+    sc = jnp.asarray(np.random.RandomState(6).randint(-6, 2, sshape),
+                     jnp.float32)
+    PB.reset_fallback_count()
+    qr = N.encode(x, spec, sc, backend="reference")
+    qp = N.encode(x, spec, sc, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(qr.codes), np.asarray(qp.codes))
+    np.testing.assert_array_equal(np.asarray(N.decode(qr)),
+                                  np.asarray(N.decode(qp, backend="pallas")))
+    assert PB.fallback_count() == 0, \
+        "KV-pool-shaped scales must run the vectorized kernel natively"
+
+
+def test_pow2_fake_quant_shares_leading_dim_convention():
+    """One scale convention across all three codec ops: a per-layer (L, 1)
+    scale means the same thing to fake_quant as to encode/decode (leading-
+    dim broadcast), on both backends. Before the fix fake_quant applied
+    numpy trailing-dim alignment and raised (or silently mis-scaled) on
+    exactly the shapes encode accepts."""
+    spec = N.QuantSpec("pow2", 8)
+    x = jax.random.normal(jax.random.PRNGKey(9), (3, 6, 4)) * 2
+    sc = jnp.asarray([[-3.0], [-2.0], [0.0]])               # (L, 1)
+    fq = N.fake_quant(x, spec, sc)
+    rt = N.decode(N.encode(x, spec, sc), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fq), np.asarray(rt))
+    np.testing.assert_array_equal(
+        np.asarray(fq), np.asarray(N.fake_quant(x, spec, sc,
+                                                backend="pallas")))
+
+
+def test_pow2_nonconforming_scale_still_falls_back():
+    """A scale that does not follow the leading-dim broadcast convention is
+    routed to the reference codec and the fallback counter records it (the
+    differential harness relies on the counter to prove native coverage)."""
+    from repro.numerics import pallas_backend as PB
+    spec = N.QuantSpec("pow2", 8)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 6))
+    PB.reset_fallback_count()
+    with pytest.raises(Exception):
+        # (3,) matches no leading dim of (4, 6): the reference cannot
+        # broadcast it either — but the fallback must be taken (counted)
+        # before the reference raises
+        N.encode(x, spec, jnp.zeros((3,)), backend="pallas")
+    assert PB.fallback_count() == 1
+
+
+def test_kv_cache_pool_quant_no_fallback(monkeypatch):
+    """serve/kv_cache quantize/dequantize with pool-shaped per-slot scales
+    route through the native multi-scale kernels when the pallas backend is
+    selected, bit-identical to the default reference path."""
+    from repro.numerics import pallas_backend as PB
+    from repro.serve import kv_cache as KC
+    x = jax.random.normal(jax.random.PRNGKey(8), (3, 8, 2, 4)) * 2
+    sc = KC.choose_scale_log2(x, jnp.ones((8,), bool), 8)       # (3,)
+    # reference side must really be the reference backend, even when the
+    # whole process runs under the CI kernel-validation env
+    monkeypatch.delenv("JAX_PALLAS_INTERPRET", raising=False)
+    assert KC.codec_backend() == "reference" or \
+        jax.default_backend() == "tpu"
+    ref_codes = KC.quantize(x, sc[:, None], 8)
+    ref_deq = KC.dequantize(ref_codes, sc[:, None], jnp.float32)
+    monkeypatch.setenv("JAX_PALLAS_INTERPRET", "1")
+    assert KC.codec_backend() == "pallas"
+    PB.reset_fallback_count()
+    codes = KC.quantize(x, sc[:, None], 8)
+    deq = KC.dequantize(codes, sc[:, None], jnp.float32)
+    assert PB.fallback_count() == 0
+    np.testing.assert_array_equal(np.asarray(codes), np.asarray(ref_codes))
+    np.testing.assert_array_equal(np.asarray(deq), np.asarray(ref_deq))
+
+
 def test_pallas_fake_quant_has_clipped_ste():
     spec = N.QuantSpec("pow2", 4)
     x = jnp.asarray([-0.3, 0.0, 0.4, 50.0, -50.0])

@@ -1,0 +1,252 @@
+"""Differential harness for the fused paged-attention decode kernel.
+
+The jnp gather-then-attend path (``kv_cache.gather_slots`` +
+``models/attention.py::gqa_attend``) is the numerics oracle; the fused
+implementations (Pallas kernel in interpret mode, and the bit-locked jnp
+page-scan the engine uses off-TPU) must agree with it:
+
+(a) kernel vs oracle on synthetic pools: logits to float-roundoff over
+    ragged ``cur_len``s, MHA/GQA/MQA head layouts, int8 + fp storage;
+(b) kernel vs jnp page-scan (page_chunk=1): BIT-identical — same per-page
+    online-softmax update order, so the two stay locked as kernels multiply;
+(c) engine level: fused continuous-batched greedy decode is token-identical
+    to the gather engine over staggered ragged requests (prompts and
+    generations crossing page boundaries), in fp32 and int8 pools;
+(d) preemption + resume under page pressure keeps fused == gather;
+(e) MLA archs fall back to the gather reference and still match.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.kernels import paged_attention as PA
+from repro.kernels.ops import paged_attention
+from repro.models import build_lm, init_lm
+from repro.models.attention import gqa_attend
+from repro.serve import Engine, EngineConfig, PoolConfig
+from repro.serve import kv_cache as KC
+from repro.serve.kv_cache import PoolConfig as PC
+from repro.sharding import ShardPlan
+
+PLAN = ShardPlan(mesh=None)
+
+
+# ---------------------------------------------------------------------------
+# (a)+(b) kernel-level differential on synthetic pools
+# ---------------------------------------------------------------------------
+
+def _synthetic_pool(seed, *, b, pp, page, hkv, hq, dh, quantized):
+    """Random paged pool + table + ragged lens; returns kernel args and the
+    gather-reference args."""
+    rng = np.random.RandomState(seed)
+    total = b * pp                       # one page of slack per slot
+    if quantized:
+        kd = jnp.asarray(rng.randint(-128, 128, (total + 1, page, hkv, dh)),
+                         jnp.int8)
+        vd = jnp.asarray(rng.randint(-128, 128, (total + 1, page, hkv, dh)),
+                         jnp.int8)
+        ks = jnp.asarray(rng.randint(-6, 1, (b,)), jnp.float32)
+        vs = jnp.asarray(rng.randint(-6, 1, (b,)), jnp.float32)
+    else:
+        kd = jnp.asarray(rng.randn(total + 1, page, hkv, dh), jnp.float32)
+        vd = jnp.asarray(rng.randn(total + 1, page, hkv, dh), jnp.float32)
+        ks = jnp.zeros((b,), jnp.float32)
+        vs = jnp.zeros((b,), jnp.float32)
+    table = jnp.asarray(rng.permutation(total).reshape(b, pp), jnp.int32)
+    # ragged: first/mid/last positions incl. exact page boundaries
+    lens = jnp.asarray(rng.randint(0, pp * page, (b,)), jnp.int32)
+    lens = lens.at[0].set(0).at[-1].set(pp * page - 1)
+    if b > 2:
+        lens = lens.at[1].set(page)     # exactly one full page + boundary
+    q = jnp.asarray(rng.randn(b, hq, dh), jnp.float32)
+    return q, kd, vd, ks, vs, table, lens
+
+
+def _gather_reference(q, kd, vd, ks, vs, table, lens, *, page, quantized):
+    """The oracle: materialize every slot's dequantized view, full-softmax
+    attend (gather_slots + gqa_attend semantics)."""
+    from dataclasses import dataclass
+
+    b, hq, dh = q.shape
+    pp = table.shape[1]
+    hkv = kd.shape[2]
+    pcfg = PC(num_slots=b, page_size=page, pages_per_slot=pp,
+              quantized=quantized)
+
+    @dataclass
+    class D:
+        num_heads: int
+        num_kv_heads: int
+        head_dim: int
+        real_heads: int
+
+    k = KC.gather_slots(kd, ks, table, pcfg, jnp.float32)
+    v = KC.gather_slots(vd, vs, table, pcfg, jnp.float32)
+    out = gqa_attend(q[:, None], k, v, D(hq, hkv, dh, hq), lens[:, None])
+    return out.reshape(b, hq, dh)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (6, 2), (3, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("quantized", [False, True])
+def test_kernel_matches_gather_reference(hq, hkv, quantized):
+    args = _synthetic_pool(0, b=4, pp=5, page=8, hkv=hkv, hq=hq, dh=16,
+                           quantized=quantized)
+    ref = _gather_reference(*args, page=8, quantized=quantized)
+    out = PA.paged_attention_kernel(*args, page_size=8, quantized=quantized,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_kernel_bit_locked_to_jnp_page_scan(quantized):
+    """page_chunk=1 page-scan replays the kernel's exact update order —
+    the two fused implementations must agree BITWISE."""
+    args = _synthetic_pool(1, b=3, pp=4, page=8, hkv=2, hq=4, dh=16,
+                           quantized=quantized)
+    kout = PA.paged_attention_kernel(*args, page_size=8,
+                                     quantized=quantized, interpret=True)
+    jout = PA.paged_attention_jnp(*args, page_size=8, quantized=quantized,
+                                  page_chunk=1)
+    np.testing.assert_array_equal(np.asarray(kout), np.asarray(jout))
+
+
+def test_chunked_page_scan_matches_reference():
+    """Larger page_chunks (the off-TPU perf setting, incl. a non-dividing
+    chunk that pads the logical page axis with trash pointers) stay within
+    float-roundoff of the oracle."""
+    args = _synthetic_pool(2, b=4, pp=5, page=8, hkv=2, hq=4, dh=16,
+                           quantized=True)
+    ref = _gather_reference(*args, page=8, quantized=True)
+    for chunk in (2, 3, 5):
+        out = PA.paged_attention_jnp(*args, page_size=8, quantized=True,
+                                     page_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_ops_wrapper_impl_selection():
+    args = _synthetic_pool(3, b=2, pp=3, page=8, hkv=2, hq=4, dh=16,
+                           quantized=True)
+    a = paged_attention(*args, page_size=8, quantized=True, impl="pallas")
+    b = paged_attention(*args, page_size=8, quantized=True, impl="jnp",
+                        page_chunk=1)
+    c = paged_attention(*args, page_size=8, quantized=True, impl="auto")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_allclose(np.asarray(c), np.asarray(a),
+                               rtol=1e-5, atol=1e-5)
+    with pytest.raises(ValueError):
+        paged_attention(*args, page_size=8, quantized=True, impl="nope")
+
+
+def test_kernel_under_jit_and_scan():
+    """The engine calls the kernel inside a jitted per-layer scan — the
+    pallas_call must trace cleanly under both."""
+    args = _synthetic_pool(4, b=2, pp=3, page=8, hkv=2, hq=4, dh=16,
+                           quantized=True)
+    q, kd, vd, ks, vs, table, lens = args
+    f = jax.jit(functools.partial(PA.paged_attention_kernel, page_size=8,
+                                  quantized=True, interpret=True))
+    direct = f(q, kd, vd, ks, vs, table, lens)
+
+    def body(carry, _):
+        return carry, f(q, kd, vd, ks, vs, table, lens)
+
+    _, scanned = jax.lax.scan(body, 0, jnp.arange(2))
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(scanned[0]))
+    np.testing.assert_array_equal(np.asarray(direct), np.asarray(scanned[1]))
+
+
+# ---------------------------------------------------------------------------
+# (c)-(e) engine-level differential
+# ---------------------------------------------------------------------------
+
+def _setup(arch="internlm2-1.8b"):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    return cfg, lm, params
+
+
+def _prompts(cfg, n, lo, hi, seed=7):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size,
+                        int(rng.randint(lo, hi + 1))).tolist()
+            for _ in range(n)]
+
+
+def _run_engine(lm, params, pcfg, prompts, gens, **ekw):
+    eng = Engine(lm, params, EngineConfig(pool=pcfg, **ekw), PLAN)
+    rids = [eng.submit(p, max_new_tokens=g) for p, g in zip(prompts, gens)]
+    res = eng.run()
+    return [res[r].tokens for r in rids], eng
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_fused_engine_token_identical_to_gather(quantized, impl):
+    """Staggered ragged requests on 2 slots; page_size 4 so prompts and
+    generations cross several page boundaries mid-request."""
+    cfg, lm, params = _setup()
+    pcfg = PoolConfig(num_slots=2, page_size=4, pages_per_slot=8,
+                      quantized=quantized)
+    prompts = _prompts(cfg, 4, 5, 15)
+    gens = [8, 5, 7, 6]
+    ref, _ = _run_engine(lm, params, pcfg, prompts, gens)
+    out, _ = _run_engine(lm, params, pcfg, prompts, gens,
+                         fused_attention=True, fused_impl=impl)
+    assert out == ref, (impl, quantized, out, ref)
+
+
+@pytest.mark.parametrize("impl", ["pallas", "jnp"])
+def test_fused_engine_after_preemption_and_resume(impl):
+    """Shared pool smaller than slots*pages_per_slot forces preemption;
+    the resumed (re-prefilled) requests must still match token-for-token."""
+    cfg, lm, params = _setup()
+    pcfg = PoolConfig(num_slots=3, page_size=4, pages_per_slot=10,
+                      num_pages=12, quantized=False)
+    prompts = _prompts(cfg, 3, 8, 10, seed=11)
+    gens = [14, 14, 14]
+    ref, ref_eng = _run_engine(lm, params, pcfg, prompts, gens)
+    out, eng = _run_engine(lm, params, pcfg, prompts, gens,
+                           fused_attention=True, fused_impl=impl)
+    assert eng.summary()["preemptions"] >= 1
+    assert ref_eng.summary()["preemptions"] >= 1
+    assert out == ref
+
+
+def test_mla_arch_falls_back_to_gather():
+    """deepseek-v2 (MLA) with the fused flag on: every sublayer takes the
+    gather reference path (the fallback matrix) and decode is unchanged."""
+    cfg, lm, params = _setup("deepseek-v2-236b")
+    assert any(sub.mixer_kind == "attn_mla" for sub in lm.period)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=4,
+                      quantized=False)
+    prompts = _prompts(cfg, 2, 8, 12, seed=13)
+    gens = [5, 6]
+    ref, _ = _run_engine(lm, params, pcfg, prompts, gens)
+    out, eng = _run_engine(lm, params, pcfg, prompts, gens,
+                           fused_attention=True)
+    assert not any(eng._fused_for(sub) for sub in lm.period
+                   if sub.mixer_kind == "attn_mla")
+    assert out == ref
+
+
+def test_fused_chunked_prefill_matches_whole_prompt():
+    """Chunked prefill writes + fused decode reads coexist on one pool."""
+    cfg, lm, params = _setup()
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=6,
+                      quantized=True)
+    prompt = _prompts(cfg, 1, 24, 24, seed=17)[0]
+    outs = []
+    for chunk in (0, 8):
+        eng = Engine(lm, params,
+                     EngineConfig(pool=pcfg, prefill_chunk=chunk,
+                                  fused_attention=True), PLAN)
+        rid = eng.submit(prompt, max_new_tokens=6)
+        outs.append(eng.run()[rid].tokens)
+    assert outs[0] == outs[1]

@@ -82,6 +82,17 @@ def test_lambda_update_matches_eq4_exactly(spec, seed):
                                    rtol=1e-4)
 
 
+@given(st.integers(0, 2 ** 31 - 1), st.integers(10, 60))
+def test_paged_pool_slot_isolation(seed, steps):
+    """Random submit/admit/decode/retire/preempt sequences preserve the
+    paged KV pool's isolation invariants: no slot ever reads another slot's
+    pages, page accounting stays disjoint, and writes to retired/inactive
+    slots land on the trash page (see tests/pool_walk.py; a deterministic
+    seed sweep in test_serve.py keeps this exercised without hypothesis)."""
+    from pool_walk import run_pool_walk
+    run_pool_walk(seed, steps)
+
+
 @given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
 def test_scale_manager_monotone_response(n, k, seed):
     """Scaling the input up never decreases the chosen exponent."""

@@ -253,6 +253,15 @@ def test_scheduler_page_accounting():
     assert (sched.page_table == pcfg.trash_page).all()
 
 
+def test_pool_invariants_random_walks():
+    """Deterministic seed sweep of the pool-isolation walker (the
+    hypothesis property test in test_property.py drives the same walker
+    with generated seeds; this keeps it exercised on bare environments)."""
+    from pool_walk import run_pool_walk
+    for seed in range(10):
+        run_pool_walk(seed, steps=40)
+
+
 def test_sampling_modes():
     key = jax.random.PRNGKey(0)
     logits = jnp.asarray(np.random.RandomState(0).randn(4, 50) * 3,
