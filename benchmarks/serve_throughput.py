@@ -1,5 +1,6 @@
 """Serving-throughput sweep: batch slots × quantized-vs-fp KV pool, plus a
-fused-vs-gather paged-attention decode sweep (``--fused``).
+fused-vs-gather paged-attention decode sweep (``--fused``) and an
+SSM/hybrid recurrent-state serving sweep (``--ssm``).
 
 Default mode drives the continuous-batching engine over a fixed request mix
 on a reduced config and records tokens/s, TTFT/latency percentiles and
@@ -12,11 +13,18 @@ step on an int8 pool: 1B codes read + 4B fp32 view written + 4B re-read by
 attention, vs 1B codes read once). Emits one JSON document (the
 bench-trajectory format) to stdout or ``--out``.
 
+``--ssm`` drives an SSM or hybrid arch through the engine (fp32 vs int8
+recurrent-state cache) against the legacy static-batch greedy loop
+baseline, recording tokens/s and resident state bytes — the ≥3.5×
+state-byte reduction acceptance measurement — into ``BENCH_ssm_serve.json``.
+
     PYTHONPATH=src python benchmarks/serve_throughput.py
     PYTHONPATH=src python benchmarks/serve_throughput.py \
         --arch deepseek-v2-236b --slots 2 4 --out /tmp/serve_bench.json
     PYTHONPATH=src python benchmarks/serve_throughput.py --fused \
         --out BENCH_paged_attn.json
+    PYTHONPATH=src python benchmarks/serve_throughput.py --ssm \
+        --arch rwkv6-1.6b --out BENCH_ssm_serve.json
 """
 from __future__ import annotations
 
@@ -222,6 +230,114 @@ def run_fused_sweep(arch: str, ctxs: list[int], slots: int, page_size: int,
                        "ctx>=2048": ">=1.3x (HBM roofline; see modeled)"}}
 
 
+def _static_loop_cell(lm, params, plan, *, batch: int, prompt_len: int,
+                      gen_len: int) -> dict:
+    """Legacy static-batch greedy loop (the pre-state-cache serving path
+    for SSM/hybrid archs): whole-batch prefill, scalar-position decode, no
+    admission/retirement. The baseline the engine cells compare against."""
+    import jax.numpy as jnp
+    from repro.launch.steps import make_prefill_step, make_serve_step
+
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (batch, prompt_len),
+                                0, lm.cfg.vocab_size)
+    prefill = jax.jit(make_prefill_step(lm, plan))
+    logits, cache = prefill(params, {"tokens": prompt})
+
+    # grow only the per-token attention leaves (keyed by name: recurrent
+    # state axes can coincide with prompt_len — e.g. reduced-jamba d_inner)
+    def pad_seq(path, a):
+        leaf = path[-1].key if hasattr(path[-1], "key") else None
+        if leaf in ("k", "v", "c_kv", "k_rope") and a.shape[2] == prompt_len:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, gen_len)
+            return jnp.pad(a, pad)
+        return a
+
+    cache = jax.tree_util.tree_map_with_path(pad_seq, cache)
+    cache_bytes = sum(a.nbytes
+                      for a in jax.tree_util.tree_leaves(cache))
+    step = jax.jit(make_serve_step(lm, plan))
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    logits, cache = step(params, cache, tok, jnp.int32(prompt_len))  # warm
+    jax.block_until_ready(logits)
+    t0 = time.time()
+    n = 0
+    for i in range(1, gen_len - 1):
+        logits, cache = step(params, cache, tok, jnp.int32(prompt_len + i))
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+        n += batch
+    jax.block_until_ready(tok)
+    wall = time.time() - t0
+    return {"mode": "static_loop", "state": "fp32", "batch": batch,
+            "tokens_per_s": n / max(wall, 1e-9),
+            "cache_bytes": cache_bytes}
+
+
+def run_ssm_sweep(arch: str, slots: int, requests: int, prompt_len: int,
+                  gen_len: int, page_size: int) -> dict:
+    """Engine (fp32-state vs int8-state) vs static-loop baseline for an
+    SSM/hybrid arch. Emits the BENCH_ssm_serve document."""
+    import repro.configs as C
+    from repro.models import build_lm, init_lm
+    from repro.serve import Engine, EngineConfig, PoolConfig
+    from repro.sharding import ShardPlan
+
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    lm = build_lm(cfg)
+    recurrent = [s.mixer_kind for s in lm.period
+                 if s.mixer_kind in ("mamba", "rwkv6")]
+    if not recurrent:
+        raise SystemExit(f"--ssm wants an SSM/hybrid arch, {arch} has no "
+                         f"recurrent sublayers")
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    plan = ShardPlan(mesh=None)
+    cells = [_static_loop_cell(lm, params, plan, batch=slots,
+                               prompt_len=prompt_len, gen_len=gen_len)]
+    print(f"  static loop: {cells[0]['tokens_per_s']:.1f} tok/s, "
+          f"{cells[0]['cache_bytes']} cache bytes", file=sys.stderr)
+    horizon = prompt_len + gen_len
+    state_bytes = {}
+    for quantized in (False, True):
+        pcfg = PoolConfig(num_slots=slots, page_size=page_size,
+                          pages_per_slot=-(-horizon // page_size) + 1,
+                          quantized=quantized)
+        eng = Engine(lm, params, EngineConfig(pool=pcfg), plan)
+        rng = np.random.RandomState(0)
+        for _ in range(requests):
+            plen = int(rng.randint(max(prompt_len // 2, 1), prompt_len + 1))
+            eng.submit(rng.randint(0, lm.cfg.vocab_size, plen).tolist(),
+                       max_new_tokens=gen_len)
+        t0 = time.time()
+        eng.run()
+        wall = time.time() - t0
+        s = eng.summary()
+        state = "int8" if quantized else "fp32"
+        state_bytes[state] = s["state_bytes"]
+        cells.append({
+            "mode": "engine", "state": state, "slots": slots,
+            "requests": requests, "wall_s": wall,
+            "tokens_per_s": s["tokens_per_s"],
+            "ttft_p50_s": s["ttft_p50_s"],
+            "latency_p50_s": s["latency_p50_s"],
+            "state_bytes": s["state_bytes"],
+            "state_bytes_fp32": s["state_bytes_fp32"],
+            "state_reduction_vs_fp32": s["state_reduction"],
+            "cache_bytes": s["cache_bytes"],
+            "preemptions": s["preemptions"],
+        })
+        print(f"  engine state={state}: {s['tokens_per_s']:.1f} tok/s, "
+              f"{s['state_bytes']} state bytes "
+              f"({s['state_reduction']:.2f}x vs fp32)", file=sys.stderr)
+    return {"bench": "ssm_serve", "arch": arch,
+            "mixers": sorted(set(recurrent)), "slots": slots,
+            "prompt_len": prompt_len, "gen_len": gen_len,
+            "page_size": page_size, "backend": jax.default_backend(),
+            "state_reduction_int8": (state_bytes["fp32"]
+                                     / max(state_bytes["int8"], 1)),
+            "target": {"state_reduction_int8": ">=3.5x"},
+            "cells": cells}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b")
@@ -235,6 +351,9 @@ def main() -> None:
     ap.add_argument("--fused", action="store_true",
                     help="fused-vs-gather paged-attention decode sweep "
                          "(emits the BENCH_paged_attn document)")
+    ap.add_argument("--ssm", action="store_true",
+                    help="SSM/hybrid engine vs static-loop sweep "
+                         "(emits the BENCH_ssm_serve document)")
     ap.add_argument("--ctx", type=int, nargs="+", default=[128, 512, 2048])
     ap.add_argument("--decode-steps", type=int, default=12)
     ap.add_argument("--fp-pool", action="store_true",
@@ -244,7 +363,14 @@ def main() -> None:
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
-    if args.fused:
+    if args.ssm:
+        requests = 4 if args.smoke else args.requests
+        plen = 8 if args.smoke else args.prompt_len
+        glen = 6 if args.smoke else args.gen_len
+        doc = run_ssm_sweep(args.arch, slots=args.slots[0],
+                            requests=requests, prompt_len=plen,
+                            gen_len=glen, page_size=args.page_size or 8)
+    elif args.fused:
         ctxs = [64] if args.smoke else args.ctx
         steps = 4 if args.smoke else args.decode_steps
         page = args.page_size or (8 if args.smoke else 16)

@@ -1,62 +1,27 @@
 """Serving example on the continuous-batching engine (repro.serve): a
 stream of variable-length requests is packed into a fixed-slot batch with a
-slot-paged, optionally int8-quantized KV-cache pool.
+slot-paged, optionally int8-quantized KV-cache pool — and, for SSM/hybrid
+archs, a slot-indexed quantized recurrent-state cache (attention sublayers
+hit the KV pool, SSM/RWKV sublayers hit the state cache; one engine serves
+every decoder family in the zoo):
 
     PYTHONPATH=src python examples/serve_decode.py --arch internlm2-1.8b
     PYTHONPATH=src python examples/serve_decode.py --arch internlm2-1.8b --quantized
     PYTHONPATH=src python examples/serve_decode.py --arch deepseek-v2-236b --temperature 0.8
-
-SSM / hybrid archs (rwkv6, jamba) fall back to the legacy static-batch
-greedy loop (recurrent-state serving is an open roadmap item):
-
-    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b
+    PYTHONPATH=src python examples/serve_decode.py --arch rwkv6-1.6b --quantized
+    PYTHONPATH=src python examples/serve_decode.py --arch jamba-1.5-large
 """
 import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
 import numpy as np
+import jax
 
 import repro.configs as C
-from repro.launch.steps import make_prefill_step, make_serve_step
 from repro.models import build_lm, init_lm
 from repro.serve import (Engine, EngineConfig, PoolConfig, SamplingParams)
 from repro.sharding import ShardPlan
-
-
-def static_fallback(cfg, lm, params, plan, args):
-    """Legacy single-batch greedy loop (kept for SSM/hybrid archs)."""
-    b, p, g = args.requests, args.prompt_len, args.gen_len
-    prompt = jax.random.randint(jax.random.PRNGKey(1), (b, p), 0,
-                                cfg.vocab_size)
-    prefill = jax.jit(make_prefill_step(lm, plan))
-    t0 = time.time()
-    logits, cache = prefill(params, {"tokens": prompt})
-
-    def pad_seq(a):
-        if a.ndim >= 3 and a.shape[2] == p:   # (L, B, S, ...)
-            pad = [(0, 0)] * a.ndim
-            pad[2] = (0, g)
-            return jnp.pad(a, pad)
-        return a
-
-    cache = jax.tree.map(pad_seq, cache)
-    print(f"prefill {b}x{p} in {time.time()-t0:.2f}s")
-    step = jax.jit(make_serve_step(lm, plan))
-    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(g - 1):
-        logits, cache = step(params, cache, tok, jnp.int32(p + i))
-        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
-        out.append(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"decoded {b}x{g-1} tokens in {dt:.2f}s "
-          f"({b*(g-1)/max(dt,1e-9):.0f} tok/s greedy)")
-    print("sample:", gen[0, :16].tolist())
 
 
 def main():
@@ -68,7 +33,8 @@ def main():
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--quantized", action="store_true",
-                    help="int8 pow-2 KV-cache pool (fp storage otherwise)")
+                    help="int8 pow-2 KV-cache pool + recurrent-state cache "
+                         "(fp storage otherwise)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -81,16 +47,12 @@ def main():
     cfg = C.get_reduced(args.arch).replace(dtype="float32", remat="none")
     if cfg.is_encoder:
         raise SystemExit(f"{args.arch} is encoder-only — no decode path")
+    if cfg.frontend != "none":
+        raise SystemExit(f"{args.arch}: frontend (vision/audio) serving is "
+                         f"an open roadmap item")
     plan = ShardPlan(mesh=None)
     lm = build_lm(cfg)
     params = init_lm(jax.random.PRNGKey(0), lm)
-
-    attn_only = all(s.mixer_kind in ("attn_gqa", "attn_mla")
-                    for s in lm.period)
-    if not attn_only or cfg.frontend != "none":
-        print(f"{args.arch}: recurrent/frontend arch — using the static "
-              f"fallback loop (engine support is an open roadmap item)")
-        return static_fallback(cfg, lm, params, plan, args)
 
     horizon = args.prompt_len + args.gen_len
     pcfg = PoolConfig(
@@ -118,13 +80,22 @@ def main():
     results = eng.run()
     dt = time.time() - t0
     s = eng.summary()
-    mode = "int8-paged" if args.quantized else "fp-paged"
+    mode = "int8" if args.quantized else "fp"
+    # only report the pools this arch actually allocates: pure-SSM archs
+    # have no KV pool (and run unpaged), attn-only archs no state cache
+    pools = []
+    if s["cache_bytes"]:
+        pools.append(f"kv cache {s['cache_bytes']/1024:.0f} KiB "
+                     f"({s['cache_reduction']:.1f}x vs fp32)")
+    if s["state_bytes"]:
+        pools.append(f"state cache {s['state_bytes']/1024:.0f} KiB "
+                     f"({s['state_reduction']:.1f}x vs fp32)")
+    label = f"{mode}-paged" if s["cache_bytes"] else f"{mode}-state"
     print(f"served {s['requests_completed']} requests "
           f"({s['generated_tokens']} tokens) on {args.slots} slots "
-          f"[{mode}] in {dt:.2f}s — {s['tokens_per_s']:.0f} tok/s, "
+          f"[{label}] in {dt:.2f}s — {s['tokens_per_s']:.0f} tok/s, "
           f"ttft p50 {s['ttft_p50_s']*1e3:.0f}ms, "
-          f"cache {s['cache_bytes']/1024:.0f} KiB "
-          f"({s['cache_reduction']:.1f}x vs fp32)")
+          + ", ".join(pools))
     print("sample:", results[rids[0]].tokens[:16])
     print(json.dumps(s, indent=2))
 

@@ -3,7 +3,13 @@ d_ff=24576, MoE 16e top-2 — Mamba+attn 1:7 interleave [arXiv:2403.19887].
 
 Period of 8 layers: attention at position 4 (Jamba's attn_layer_offset),
 Mamba elsewhere; MoE FFN at odd positions, dense FFN at even (Jamba applies
-MoE every other layer)."""
+MoE every other layer).
+
+Serving (repro.serve): hybrid routing — the 1-in-8 attention sublayers page
+K/V through the quantized KV pool while the 7-in-8 Mamba sublayers keep
+O(1) state (conv (d_conv-1)·d_inner + h d_inner·d_state per layer) in the
+``serve/state_cache.py`` pool, so resident serving memory is dominated by
+the single attention layer's pages, not the Mamba stack."""
 from .base import MoEConfig, ModelConfig, SSMConfig
 
 CONFIG = ModelConfig(

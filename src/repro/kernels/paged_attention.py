@@ -17,9 +17,13 @@ Two implementations of the same dataflow:
   operands — the BlockSpec index map chases the slot's page pointers, so
   each grid step DMAs exactly one int8 K and V page into VMEM, dequantizes
   with the slot's pow-2 scale in-register, and folds the page into the
-  (m, l, acc) online-softmax state held in VMEM scratch.  Runs compiled on
-  TPU; in interpret mode everywhere else (the differential-test oracle
-  mode — see tests/test_paged_attention.py).
+  (m, l, acc) online-softmax state held in VMEM scratch.  Grid steps for
+  pages entirely above ``lens[slot]`` are predicated out (``pl.when``): a
+  fully-masked page is the exact identity update, so short slots in a
+  ragged batch skip their tail pages' dequant + MXU work for free (the
+  grid is sized by ``pages_per_slot``, i.e. the longest possible slot).
+  Runs compiled on TPU; in interpret mode everywhere else (the
+  differential-test oracle mode — see tests/test_paged_attention.py).
 - ``paged_attention_jnp``: the identical page-walk written as a
   ``jax.lax.scan`` over pages in plain jnp.  Same per-page dequant, same
   online-softmax update order, so it is bit-locked against the kernel (the
@@ -110,25 +114,34 @@ def _pa_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                    # (Hq, Dh)
-    k = k_ref[0]                                        # (page, Hkv, Dh)
-    v = v_ref[0]
-    if quantized:
-        # in-kernel pow-2 dequant: one multiply per element, straight from
-        # the int8 page in VMEM — no fp32 page ever round-trips through HBM
-        k = k.astype(jnp.float32) * jnp.exp2(ks_ref[b])
-        v = v.astype(jnp.float32) * jnp.exp2(vs_ref[b])
-    else:
-        k = k.astype(jnp.float32)
-        v = v.astype(jnp.float32)
-    k = _expand_kv(k, groups)
-    v = _expand_kv(v, groups)
-    s = _page_scores(q, k, p, page_size, lens_ref[b], scale)
-    m_new, l_new, acc_new = _online_update(m_ref[...], l_ref[...],
-                                           acc_ref[...], s, v)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
-    acc_ref[...] = acc_new
+    # per-slot early exit: pages whose first position sits above the slot's
+    # incoming token carry no attendable keys — every score would mask to
+    # NEG_INF, making the online-softmax update the exact identity
+    # (m_new = m, corr = 1, p = exp(NEG_INF - m) = 0), so predicating the
+    # whole update out is bitwise-free and skips the dequant + MXU work for
+    # short slots in a long-slot batch (the grid is sized by the longest).
+    @pl.when(p * page_size <= lens_ref[b])
+    def _update():
+        q = q_ref[0].astype(jnp.float32)                # (Hq, Dh)
+        k = k_ref[0]                                    # (page, Hkv, Dh)
+        v = v_ref[0]
+        if quantized:
+            # in-kernel pow-2 dequant: one multiply per element, straight
+            # from the int8 page in VMEM — no fp32 page ever round-trips
+            # through HBM
+            k = k.astype(jnp.float32) * jnp.exp2(ks_ref[b])
+            v = v.astype(jnp.float32) * jnp.exp2(vs_ref[b])
+        else:
+            k = k.astype(jnp.float32)
+            v = v.astype(jnp.float32)
+        kx = _expand_kv(k, groups)
+        vx = _expand_kv(v, groups)
+        s = _page_scores(q, kx, p, page_size, lens_ref[b], scale)
+        m_new, l_new, acc_new = _online_update(m_ref[...], l_ref[...],
+                                               acc_ref[...], s, vx)
+        m_ref[...] = m_new
+        l_ref[...] = l_new
+        acc_ref[...] = acc_new
 
     @pl.when(p == num_pages - 1)
     def _emit():

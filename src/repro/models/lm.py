@@ -196,8 +196,12 @@ def tt_embed_lookup(eparams: dict, tokens: jax.Array, site: SiteDef,
 
 def _sub_forward(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
                  plan: ShardPlan, positions: jax.Array, *,
-                 return_cache: bool):
-    """One sublayer (mixer + optional ffn). Returns (x, aux, cache_entry)."""
+                 return_cache: bool, token_mask: jax.Array | None = None):
+    """One sublayer (mixer + optional ffn). Returns (x, aux, cache_entry).
+
+    ``token_mask``: optional (B, S) bool of real tokens — serve-prefill
+    bucket padding is masked out of the MoE router so pad tokens never
+    consume expert capacity (see ``moe_forward``)."""
     aux = jnp.zeros((), jnp.float32)
     cache = {}
     h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
@@ -240,7 +244,8 @@ def _sub_forward(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
         h = rms_norm(x, pp["norm2"]["scale"], cfg.norm_eps)
         if sub.ffn_kind == "moe":
             out, a = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
-                                   mesh=plan.mesh, dp_axes=plan.dp_axes)
+                                   mesh=plan.mesh, dp_axes=plan.dp_axes,
+                                   token_mask=token_mask)
             aux = aux + a
         else:
             out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
@@ -261,11 +266,14 @@ def _remat_wrap(fn, cfg: ModelConfig):
 def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
                tokens: jax.Array | None = None,
                embeds: jax.Array | None = None,
-               return_cache: bool = False):
+               return_cache: bool = False,
+               token_mask: jax.Array | None = None):
     """Train/prefill forward.
 
     tokens: (B, S) int32 and/or embeds: (B, P, D) frontend outputs (vlm:
     embeds are prepended to token embeddings; audio: embeds replace them).
+    token_mask: optional (B, S) bool of real positions — padding (serve
+    whole-prompt prefill buckets) is excluded from MoE capacity routing.
     Returns (logits, aux, cache|None).
     """
     cfg = lm.cfg
@@ -285,7 +293,8 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
         caches = {}
         for i, sub in enumerate(lm.period):
             x, a, c = _sub_forward(pp[f"sub_{i}"], x, sub, cfg, plan,
-                                   positions, return_cache=return_cache)
+                                   positions, return_cache=return_cache,
+                                   token_mask=token_mask)
             aux = aux + a
             caches[f"sub_{i}"] = c
         return (x, aux), caches

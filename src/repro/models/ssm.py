@@ -84,6 +84,17 @@ def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
 SCAN_CHUNK = 256
 
 
+def _ssm_step(h, u_t, dt_t, bt, ct, a):
+    """One selective-scan step: h (B,Di,N) f32, u_t/dt_t (B,Di), bt/ct (B,N).
+    Returns (h_new, y (B,Di)). Shared by the prefill scan and the serve
+    engine's single-step decode so the two are bit-identical."""
+    da_t = jnp.exp(dt_t[..., None] * a[None])               # (B,Di,N)
+    x_t = (dt_t * u_t)[..., None] * bt[:, None, :]
+    h = da_t * h + x_t
+    y = jnp.einsum("bdn,bn->bd", h, ct)
+    return h, y
+
+
 def _selective_scan(u, dt, a, b_t, c_t, d_skip, h0=None):
     """u,dt: (B,S,Di); a: (Di,N); b_t,c_t: (B,S,N). Returns (y, h_last).
 
@@ -102,11 +113,7 @@ def _selective_scan(u, dt, a, b_t, c_t, d_skip, h0=None):
 
     def step(h, inp):
         u_t, dt_t, bt, ct = inp             # (B,Di),(B,Di),(B,N),(B,N)
-        da_t = jnp.exp(dt_t[..., None] * a[None])           # (B,Di,N)
-        x_t = (dt_t * u_t)[..., None] * bt[:, None, :]
-        h = da_t * h + x_t
-        y = jnp.einsum("bdn,bn->bd", h, ct)
-        return h, y
+        return _ssm_step(h, u_t, dt_t, bt, ct, a)
 
     @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
     def chunk(h, inp):
@@ -156,6 +163,37 @@ def mamba_forward(params: dict, x: jax.Array, d: MambaDef, cfg: ModelConfig,
 def mamba_init_state(d: MambaDef, batch: int, dtype) -> dict:
     return {"conv": jnp.zeros((batch, d.d_conv - 1, d.d_inner), dtype),
             "h": jnp.zeros((batch, d.d_inner, d.d_state), jnp.float32)}
+
+
+def mamba_decode_step(params: dict, x: jax.Array, d: MambaDef,
+                      cfg: ModelConfig, state: dict):
+    """Single-token Mamba decode against externally-held state (the serve
+    engine's state-cache entry point). x: (B,1,D); state as
+    ``mamba_init_state``. Returns (y (B,1,D), new_state).
+
+    Runs ``_ssm_step`` directly — no ``lax.scan``, no remat wrapper — with
+    the exact op sequence of ``mamba_forward`` at S=1, so continuous-batched
+    decode is bit-identical to the static scan-carried loop."""
+    xz = apply_site(params["in_proj"], x, d.in_proj, cfg)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi, new_conv = _causal_conv(xi, params["conv_w"].astype(xi.dtype),
+                                params["conv_b"].astype(xi.dtype),
+                                state["conv"])
+    xi = silu(xi)
+    proj = apply_site(params["x_proj"], xi, d.x_proj, cfg)
+    dt = proj[..., :d.dt_rank]
+    b_t = proj[..., d.dt_rank:d.dt_rank + d.d_state].astype(jnp.float32)
+    c_t = proj[..., d.dt_rank + d.d_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(apply_site(params["dt_proj"], dt, d.dt_proj, cfg)
+                         .astype(jnp.float32))
+    a = -jnp.exp(params["A_log"])
+    u = xi.astype(jnp.float32)
+    h_new, y = _ssm_step(state["h"], u[:, 0], dt[:, 0], b_t[:, 0], c_t[:, 0],
+                         a)
+    y = (y[:, None] + u * params["D"][None, None]).astype(u.dtype)
+    y = y.astype(x.dtype) * silu(z)
+    out = apply_site(params["out_proj"], y, d.out_proj, cfg)
+    return out, {"conv": new_conv.astype(x.dtype), "h": h_new}
 
 
 # ---------------------------------------------------------------------------
@@ -229,6 +267,16 @@ def _token_shift(x: jax.Array, last: jax.Array | None):
     return shifted, x[:, -1:]
 
 
+def _wkv6_step(s, rt, kt, vt, wt, u):
+    """One WKV6 recurrence step: s (B,H,Dh,Dh) f32 state, rt/kt/vt/wt
+    (B,H,Dh) f32, u (H,Dh) bonus. Returns (s_new, out (B,H,Dh)). Shared by
+    the prefill scan and the serve engine's single-step decode."""
+    kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+    out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+    s = wt[..., None] * s + kv
+    return s, out
+
+
 def _wkv6_scan(r, k, v, w, u, h0):
     """RWKV6 recurrence. r,k,v: (B,S,H,Dh); w: (B,S,H,Dh) decay in (0,1);
     u: (H,Dh) bonus. State S: (B,H,Dh_k,Dh_v).
@@ -241,10 +289,7 @@ def _wkv6_scan(r, k, v, w, u, h0):
     """
     def step(s, inp):
         rt, kt, vt, wt = inp                         # (B,H,Dh)
-        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
-        out = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
-        s = wt[..., None] * s + kv
-        return s, out
+        return _wkv6_step(s, rt, kt, vt, wt, u)
 
     @partial(jax.checkpoint, policy=jax.checkpoint_policies.nothing_saveable)
     def chunk(s, inp):
@@ -307,6 +352,50 @@ def rwkv6_channel_mix(params, x, d: RWKV6Def, cfg: ModelConfig,
     kv = apply_site(params["ffn_v"], k, d.ffn_v, cfg)
     r = jax.nn.sigmoid(apply_site(params["ffn_r"], xr, d.ffn_r, cfg))
     return r * kv, {"shift_ffn": new_last}
+
+
+def rwkv6_time_mix_step(params, x, d: RWKV6Def, cfg: ModelConfig,
+                        state: dict):
+    """Single-token RWKV6 time-mix against externally-held state (the serve
+    engine's state-cache entry point). x: (B,1,D). Returns (y, new state
+    {"shift", "wkv"}). Runs ``_wkv6_step`` directly — the exact op sequence
+    of ``rwkv6_time_mix`` at S=1 (token shift degenerates to the stored
+    last token), so engine decode is bit-identical to the static loop."""
+    b, s, dm = x.shape
+    nh, hd = d.num_heads, d.head_dim
+    xs, new_last = state["shift"], x[:, -1:]         # S=1 token shift
+    mu = params["mu_x"].astype(x.dtype)              # (5, D)
+    xr, xk, xv, xw, xg = (x + (xs - x) * mu[i][None, None] for i in range(5))
+    r = apply_site(params["r"], xr, d.r, cfg).reshape(b, s, nh, hd)
+    k = apply_site(params["k"], xk, d.k, cfg).reshape(b, s, nh, hd)
+    v = apply_site(params["v"], xv, d.v, cfg).reshape(b, s, nh, hd)
+    g = apply_site(params["g"], xg, d.g, cfg)
+    dw = apply_site(params["w_lora_b"],
+                    jnp.tanh(apply_site(params["w_lora_a"], xw, d.w_lora_a,
+                                        cfg)),
+                    d.w_lora_b, cfg)
+    w = jnp.exp(-jnp.exp(params["w0"][None, None].astype(jnp.float32)
+                         + dw.astype(jnp.float32)))
+    w = w.reshape(b, s, nh, hd)
+    h_last, out = _wkv6_step(state["wkv"],
+                             r[:, 0].astype(jnp.float32),
+                             k[:, 0].astype(jnp.float32),
+                             v[:, 0].astype(jnp.float32),
+                             w[:, 0].astype(jnp.float32), params["u"])
+    out = out[:, None].reshape(b, s, dm).astype(x.dtype)
+    out = rms_norm(out, params["ln_x_scale"], cfg.norm_eps)
+    out = out * silu(g)
+    y = apply_site(params["o"], out, d.o, cfg)
+    return y, {"shift": new_last, "wkv": h_last}
+
+
+def rwkv6_channel_mix_step(params, x, d: RWKV6Def, cfg: ModelConfig,
+                           state: dict):
+    """Single-token RWKV6 channel-mix (state-cache entry point). x: (B,1,D).
+    Returns (y, {"shift_ffn"}). The channel mix has no recurrence beyond
+    the token shift — at S=1 the generic path IS the single-step path
+    (the shift degenerates to the stored last token), so delegate."""
+    return rwkv6_channel_mix(params, x, d, cfg, state)
 
 
 def rwkv6_init_state(d: RWKV6Def, batch: int, d_model: int, dtype) -> dict:

@@ -16,6 +16,9 @@ Site names (``SITES``):
                        block 1024, error feedback in optim/grad_compress)
 - ``kv_cache``         serving KV entries (8-bit pow2, per-tensor-max scale
                        chosen at prefill — serve/kv_cache.py)
+- ``ssm_state``        serving recurrent-state entries for SSM/RWKV mixers
+                       (8-bit pow2, per-tensor-max scale re-chosen at every
+                       overwrite — serve/state_cache.py)
 
 Scale-state: the policy hands out one ``ScaleState`` per managed site
 (``init_scales``) and the resulting tree is threaded through ``TrainState``
@@ -35,7 +38,7 @@ import jax.numpy as jnp
 from .spec import QuantSpec
 
 SITES = ("tt_factor", "activation", "grad_edge", "optimizer_moment",
-         "dp_wire", "kv_cache")
+         "dp_wire", "kv_cache", "ssm_state")
 
 
 # ---------------------------------------------------------------------------
@@ -92,6 +95,7 @@ def _default_sites(weight_bits: int = 4, act_bits: int = 8,
          QuantSpec("blockwise", 8, 256, "int8", "per_tensor_max")),
         ("dp_wire", QuantSpec("blockwise", 8, 1024, "int8", "per_tensor_max")),
         ("kv_cache", QuantSpec("pow2", 8, 0, "int8", "per_tensor_max")),
+        ("ssm_state", QuantSpec("pow2", 8, 0, "int8", "per_tensor_max")),
     )
 
 

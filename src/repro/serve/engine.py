@@ -8,20 +8,32 @@ decode batch never drains to admit new work.  K/V live in the slot-paged,
 optionally int8-quantized pool of ``serve/kv_cache.py`` and are dequantized
 on read inside the per-layer scan.
 
+Sublayer routing: attention sublayers read/write the slot-paged KV pool
+(``serve/kv_cache.py``, gather or fused paged-attention); SSM/RWKV
+sublayers read/write the slot-indexed recurrent-state cache
+(``serve/state_cache.py``) through the single-step decode entry points of
+``models/ssm.py`` — so pure-SSM (rwkv6), hybrid (jamba) and all-attention
+configs run under one continuous-batching regime.
+
 Numerics contract: in fp (non-quantized) mode the engine's prefill is the
 model's own ``lm_forward`` and its decode runs the exact attend helpers of
-``models/attention.py`` over the same cached values, so continuous-batched
+``models/attention.py`` (and the exact recurrence steps of
+``models/ssm.py``) over the same cached values/state, so continuous-batched
 greedy decode is token-identical to the static single-request reference
-(asserted by tests/test_serve.py). MoE: inactive decode slots and
-chunked-prefill tail padding are masked out of the router (zero combine
+(asserted by tests/test_serve.py and tests/test_serve_state.py). MoE:
+inactive decode slots, chunked-prefill tail padding, and whole-prompt
+prefill bucket padding are all masked out of the router (zero combine
 weight -> they can never win a capacity slot against a real token; see
-``models/moe.py::_route``). The remaining caveat is whole-prompt prefill
-padding (``prefill_bucket > 0``), which runs through the model's own
-``lm_forward`` — exact parity for MoE needs ``prefill_bucket=0``.
+``models/moe.py::_route`` and ``lm_forward(token_mask=...)``).
 
-Supported archs: every all-attention family in the zoo (dense / MoE, GQA or
-MLA). SSM/hybrid recurrent-state serving and frontend (vision/audio) archs
-are open roadmap items.
+Archs with recurrent state ignore ``prefill_bucket`` and pad no prefill
+chunks: a pad token would contaminate the scan-carried state (attention can
+trash-page a pad write; a recurrence cannot unwind one), so their prefill
+shapes are exact-length.
+
+Supported archs: every decoder family in the zoo — dense / MoE, GQA or
+MLA, pure-SSM (rwkv6), hybrid (jamba). Frontend (vision/audio) archs are
+an open roadmap item.
 """
 from __future__ import annotations
 
@@ -36,10 +48,12 @@ import numpy as np
 
 from ..numerics import NumericsPolicy
 from ..models import attention as A
+from ..models import ssm as S
 from ..models.common import apply_site, rms_norm
 from ..models.lm import LMDef, embed_tokens, lm_forward, sub_ffn_decode
 from ..sharding import ShardPlan
 from . import kv_cache as KC
+from . import state_cache as SC
 from .kv_cache import PoolConfig
 from .metrics import ServeMetrics
 from .sampling import SamplingParams, sample_tokens
@@ -57,9 +71,11 @@ class EngineConfig:
     pool: PoolConfig
     prefill_chunk: int = 0      # 0: whole-prompt prefill only
     prefill_bucket: int = 0     # pad prompts to a multiple of this to bound
-                                # compile count (0: exact length — required
-                                # for MoE token-parity: pad tokens would
-                                # compete in GShard capacity routing)
+                                # compile count (0: exact length). Pad
+                                # tokens are masked out of MoE routing;
+                                # archs with recurrent state ignore the
+                                # bucket (pads would contaminate the
+                                # scan-carried state)
     seed: int = 0
     policy: "NumericsPolicy | None" = None
                                 # numerics policy: when set, its ``kv_cache``
@@ -118,24 +134,50 @@ class Engine:
             raise NotImplementedError(
                 "frontend (vision/audio) serving is an open roadmap item")
         for sub in lm.period:
-            KC.kv_feature_shapes(sub)   # raises for SSM/hybrid mixers
+            KC.kv_feature_shapes(sub)   # raises for unknown mixer kinds
+        # per-sublayer routing: attention -> paged KV pool, SSM/RWKV ->
+        # slot-indexed recurrent-state cache
+        self._attn_keys = tuple(
+            f"sub_{i}" for i, sub in enumerate(lm.period)
+            if sub.mixer_kind in ("attn_gqa", "attn_mla"))
+        self._state_keys = tuple(
+            f"sub_{i}" for i, sub in enumerate(lm.period)
+            if sub.mixer_kind in ("mamba", "rwkv6"))
         self.lm = lm
         self.params = params
         self.ecfg = ecfg
         pcfg = ecfg.pool
+        squant, sbits = pcfg.quantized, pcfg.bits
         if ecfg.policy is not None:
             kv = ecfg.policy.spec_for("kv_cache")
             pcfg = dataclasses.replace(pcfg, quantized=ecfg.policy.enable,
                                        bits=kv.bits)
+            if self._state_keys:    # only validated where a state pool
+                try:                # will actually exist
+                    ss = ecfg.policy.spec_for("ssm_state")
+                except KeyError:    # pre-ssm_state policy JSON: follow kv
+                    ss = kv
+                if (ss.kind, ss.storage_dtype) != ("pow2", "int8"):
+                    raise NotImplementedError(
+                        f"state cache stores pow2 int8 codes only, "
+                        f"ssm_state site asks for "
+                        f"{ss.kind}/{ss.storage_dtype}")
+                squant, sbits = ecfg.policy.enable, ss.bits
         self.pcfg = pcfg
+        self.scfg = SC.StateCacheConfig(quantized=squant, bits=sbits)
         self.plan = plan or ShardPlan(mesh=None)
         self.pool = KC.init_pool(lm, self.pcfg)
-        self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk)
+        self.spool = SC.init_state_pool(lm, self.pcfg.num_slots, self.scfg)
+        # pure-SSM archs have no token-paged memory: admission is slot-only
+        self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk,
+                               paged=bool(self._attn_keys))
         self.metrics = ServeMetrics(clock=clock)
         self.metrics.cache_bytes = KC.pool_bytes(self.pool)
         self.metrics.cache_bytes_fp32 = 4 * sum(
             int(np.prod(a.shape))
             for a in jax.tree_util.tree_leaves(self.pool["data"]))
+        self.metrics.state_bytes = SC.pool_bytes(self.spool)
+        self.metrics.state_bytes_fp32 = SC.pool_bytes_fp32(self.spool)
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._nsample = 0
         self._completions: dict[int, Completion] = {}
@@ -144,17 +186,24 @@ class Engine:
         def prefill(params, tokens, length):
             """Whole-prompt prefill (the model's own forward): numerically
             the static-serving reference. jit re-specializes per prompt
-            shape; ``prefill_bucket`` bounds how many shapes occur."""
+            shape; ``prefill_bucket`` bounds how many shapes occur. Bucket
+            padding is masked out of the MoE router via ``token_mask``."""
+            mask = (jnp.arange(tokens.shape[1]) < length)[None]
             logits, _, cache = lm_forward(params, lm, self.plan,
-                                          tokens=tokens, return_cache=True)
+                                          tokens=tokens, return_cache=True,
+                                          token_mask=mask)
             return logits[0, length - 1][None], cache
 
         self._prefill_jit = jax.jit(prefill)
-        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1,))
+        self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2))
         self._write_prefill_jit = jax.jit(KC.write_prefill,
                                           donate_argnums=(0,),
                                           static_argnames=("pcfg",))
-        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=(1,))
+        self._write_state_jit = jax.jit(SC.write_prefill,
+                                        donate_argnums=(0,),
+                                        static_argnames=("scfg",))
+        self._reset_state_jit = jax.jit(SC.reset_slot, donate_argnums=(0,))
+        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
         self._sample_jit = jax.jit(sample_tokens)
 
     # ---- jitted step bodies -------------------------------------------
@@ -194,33 +243,78 @@ class Engine:
         return sub_ffn_decode(pp, x, sub, cfg, self.plan,
                               token_mask=active[:, None]), new_dsub
 
-    def _decode_impl(self, params, pool, table, lens, active, tokens):
+    def _sub_decode_state(self, pp, x, sd, ss, active, sub):
+        """One recurrent sublayer of the batched decode step: dequantize
+        every slot's state, advance one token through the mixer's
+        single-step entry point, requantize active lanes (inactive lanes
+        keep their stored codes + scale)."""
+        cfg = self.lm.cfg
+        shapes = SC.state_feature_shapes(sub, cfg)
+        state = {name: SC.read_layer(sd[name], ss[name],
+                                     SC.natural_dtype(kind, cfg), self.scfg)
+                 for name, (_, kind) in shapes.items()}
+        h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
+        if sub.mixer_kind == "mamba":
+            out, new_state = S.mamba_decode_step(pp["mixer"], h, sub.mixer,
+                                                 cfg, state)
+            x = x + out
+            x = sub_ffn_decode(pp, x, sub, cfg, self.plan,
+                               token_mask=active[:, None])
+        else:   # rwkv6: time-mix + channel-mix are the whole sublayer
+            out, st1 = S.rwkv6_time_mix_step(pp["mixer"], h, sub.mixer, cfg,
+                                             state)
+            x = x + out
+            h2 = rms_norm(x, pp["norm2"]["scale"], cfg.norm_eps)
+            out2, st2 = S.rwkv6_channel_mix_step(pp["mixer"], h2, sub.mixer,
+                                                 cfg, state)
+            x = x + out2
+            new_state = {**st1, **st2}
+        nd, ns = {}, {}
+        for name in shapes:
+            nd[name], ns[name] = SC.write_layer(sd[name], ss[name],
+                                                new_state[name], active,
+                                                self.scfg)
+        return x, (nd, ns)
+
+    def _decode_impl(self, params, pool, spool, table, lens, active, tokens):
         """One batched decode step. tokens: (B,1); lens/active: (B,).
-        Returns (logits (B,V), new pool)."""
+        Returns (logits (B,V), new KV pool, new state pool)."""
         lm = self.lm
         x = embed_tokens(params, tokens, lm)
 
         def body(x, scan_in):
-            pp, dl, sl = scan_in
-            new = {}
+            pp, dl, sl, sd, ss = scan_in
+            new, snew_d, snew_s = {}, {}, {}
             for i, sub in enumerate(lm.period):
-                x, nd = self._sub_decode(pp[f"sub_{i}"], x, dl[f"sub_{i}"],
-                                         sl[f"sub_{i}"], table, lens, active,
-                                         sub)
-                new[f"sub_{i}"] = nd
-            return x, new
+                key = f"sub_{i}"
+                if sub.mixer_kind in ("mamba", "rwkv6"):
+                    x, (nd, ns) = self._sub_decode_state(
+                        pp[key], x, sd[key], ss[key], active, sub)
+                    snew_d[key], snew_s[key] = nd, ns
+                    new[key] = dl[key]
+                else:
+                    x, nd = self._sub_decode(pp[key], x, dl[key], sl[key],
+                                             table, lens, active, sub)
+                    new[key] = nd
+                    snew_d[key], snew_s[key] = sd[key], ss[key]
+            return x, (new, snew_d, snew_s)
 
-        x, new_data = jax.lax.scan(
-            body, x, (params["layers"], pool["data"], pool["scale_log2"]))
+        x, (new_data, new_sdata, new_sscale) = jax.lax.scan(
+            body, x, (params["layers"], pool["data"], pool["scale_log2"],
+                      spool["data"], spool["scale_log2"]))
         x = rms_norm(x, params["final_norm"]["scale"], lm.cfg.norm_eps)
         logits = apply_site(params["head"], x, lm.head, lm.cfg)
-        return logits[:, 0], {"data": new_data,
-                              "scale_log2": pool["scale_log2"]}
+        return (logits[:, 0],
+                {"data": new_data, "scale_log2": pool["scale_log2"]},
+                {"data": new_sdata, "scale_log2": new_sscale})
 
-    def _chunk_impl(self, params, pool, tokens, table, slot, start,
+    def _chunk_impl(self, params, pool, spool, tokens, table, slot, start,
                     valid_len):
-        """Chunked-prefill step for one slot: write the chunk's K/V into the
-        pool, attend over the slot's full history. tokens: (1,S)."""
+        """Chunked-prefill step for one slot. Attention sublayers write the
+        chunk's K/V into the pool and attend over the slot's full history;
+        recurrent sublayers scan the chunk from the slot's carried state and
+        write the end-of-chunk state back (stateful archs pad no chunks, so
+        ``valid_len == S`` for them). tokens: (1,S)."""
         lm = self.lm
         cfg = lm.cfg
         s = tokens.shape[1]
@@ -229,36 +323,76 @@ class Engine:
         chunk_mask = (jnp.arange(s) < valid_len)[None]     # (1,S) real tokens
         x = embed_tokens(params, tokens, lm)
 
-        def body(x, scan_in):
-            pp, dl, sl = scan_in
-            new_d, new_s = {}, {}
-            for i, sub in enumerate(lm.period):
-                spp = pp[f"sub_{i}"]
-                dsub, ssub = dl[f"sub_{i}"], sl[f"sub_{i}"]
-                h = rms_norm(x, spp["norm1"]["scale"], cfg.norm_eps)
-                qd, newd = _project(spp["mixer"], h, sub, cfg, positions)
-                nd, ns, kv = {}, {}, {}
-                for name, new in newd.items():
-                    dlay, slay = KC.write_chunk(
-                        dsub[name], ssub[name], new[0], table_row, start,
-                        valid_len, slot, self.pcfg)
-                    nd[name], ns[name] = dlay, slay
-                    kv[name] = KC.gather_slots(dlay, slay[slot][None],
-                                               table_row[None], self.pcfg,
-                                               h.dtype)
-                x = x + _attend(spp["mixer"], qd, kv, sub, cfg, positions)
-                # chunk tail padding is masked out of the MoE router
+        def attn_sub(x, spp, dsub, ssub, sub):
+            h = rms_norm(x, spp["norm1"]["scale"], cfg.norm_eps)
+            qd, newd = _project(spp["mixer"], h, sub, cfg, positions)
+            nd, ns, kv = {}, {}, {}
+            for name, new in newd.items():
+                dlay, slay = KC.write_chunk(
+                    dsub[name], ssub[name], new[0], table_row, start,
+                    valid_len, slot, self.pcfg)
+                nd[name], ns[name] = dlay, slay
+                kv[name] = KC.gather_slots(dlay, slay[slot][None],
+                                           table_row[None], self.pcfg,
+                                           h.dtype)
+            x = x + _attend(spp["mixer"], qd, kv, sub, cfg, positions)
+            # chunk tail padding is masked out of the MoE router
+            x = sub_ffn_decode(spp, x, sub, cfg, self.plan,
+                               token_mask=chunk_mask)
+            return x, nd, ns
+
+        def state_sub(x, spp, sdsub, sssub, sub):
+            shapes = SC.state_feature_shapes(sub, cfg)
+            st = {name: SC.read_layer(sdsub[name][slot][None],
+                                      sssub[name][slot][None],
+                                      SC.natural_dtype(kind, cfg), self.scfg)
+                  for name, (_, kind) in shapes.items()}
+            h = rms_norm(x, spp["norm1"]["scale"], cfg.norm_eps)
+            if sub.mixer_kind == "mamba":
+                out, new_st = S.mamba_forward(spp["mixer"], h, sub.mixer,
+                                              cfg, st)
+                x = x + out
                 x = sub_ffn_decode(spp, x, sub, cfg, self.plan,
                                    token_mask=chunk_mask)
-                new_d[f"sub_{i}"], new_s[f"sub_{i}"] = nd, ns
-            return x, (new_d, new_s)
+            else:   # rwkv6
+                out, st1 = S.rwkv6_time_mix(spp["mixer"], h, sub.mixer, cfg,
+                                            st)
+                x = x + out
+                h2 = rms_norm(x, spp["norm2"]["scale"], cfg.norm_eps)
+                out2, st2 = S.rwkv6_channel_mix(spp["mixer"], h2, sub.mixer,
+                                                cfg, st)
+                x = x + out2
+                new_st = {**st1, **st2}
+            nd, ns = {}, {}
+            for name in shapes:
+                nd[name], ns[name] = SC.write_slot(
+                    sdsub[name], sssub[name], new_st[name][0], slot,
+                    self.scfg)
+            return x, nd, ns
 
-        x, (new_data, new_scale) = jax.lax.scan(
-            body, x, (params["layers"], pool["data"], pool["scale_log2"]))
+        def body(x, scan_in):
+            pp, dl, sl, sd, ss = scan_in
+            new_d, new_s, snew_d, snew_s = {}, {}, {}, {}
+            for i, sub in enumerate(lm.period):
+                key = f"sub_{i}"
+                if sub.mixer_kind in ("mamba", "rwkv6"):
+                    x, nd, ns = state_sub(x, pp[key], sd[key], ss[key], sub)
+                    snew_d[key], snew_s[key] = nd, ns
+                    new_d[key], new_s[key] = dl[key], sl[key]
+                else:
+                    x, nd, ns = attn_sub(x, pp[key], dl[key], sl[key], sub)
+                    new_d[key], new_s[key] = nd, ns
+                    snew_d[key], snew_s[key] = sd[key], ss[key]
+            return x, (new_d, new_s, snew_d, snew_s)
+
+        x, (new_data, new_scale, new_sdata, new_sscale) = jax.lax.scan(
+            body, x, (params["layers"], pool["data"], pool["scale_log2"],
+                      spool["data"], spool["scale_log2"]))
         x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
         logits = apply_site(params["head"], x, lm.head, cfg)
         last = logits[0, valid_len - 1][None]              # (1,V)
-        return last, {"data": new_data, "scale_log2": new_scale}
+        return (last, {"data": new_data, "scale_log2": new_scale},
+                {"data": new_sdata, "scale_log2": new_sscale})
 
     # ---- request lifecycle --------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
@@ -288,28 +422,48 @@ class Engine:
         plen = st.prompt_len
         chunks = self.sched.prefill_chunks(plen)
         table = jnp.asarray(self.sched.page_table)
+        stateful = bool(self._state_keys)
+        if stateful:
+            # reset-on-admit: the slot may hold a retired/preempted
+            # request's state. The first prefill chunk overwrites every
+            # tensor anyway, so this is hygiene against future partial-
+            # write paths (e.g. restore_slot interplay), not correctness
+            # today — and the donated jit makes it an in-place scatter,
+            # not a pool copy.
+            self.spool = self._reset_state_jit(self.spool, jnp.int32(slot))
         last_logits = None
         for ci, (c0, c1) in enumerate(chunks):
             toks = st.req.prompt[c0:c1]
             if ci == 0:
                 # whole-chunk model forward (exact reference numerics),
-                # then scatter the returned cache into the pool
-                bucket = self.ecfg.prefill_bucket
+                # then scatter the returned cache into the pools. Stateful
+                # archs run exact-length (a pad token would contaminate the
+                # scan-carried state; see module docstring) — bucket
+                # padding applies to attention-only archs, masked out of
+                # MoE capacity via lm_forward's token_mask.
+                bucket = 0 if stateful else self.ecfg.prefill_bucket
                 pad = (-len(toks)) % bucket if bucket > 0 else 0
                 padded = toks + [0] * pad
                 tok_arr = jnp.asarray(padded, jnp.int32)[None]
                 last_logits, cache = self._prefill_jit(
                     self.params, tok_arr, jnp.int32(len(toks)))
-                self.pool = self._write_prefill_jit(
-                    self.pool, cache, table[slot], jnp.int32(slot),
-                    jnp.int32(len(toks)), pcfg=self.pcfg)
+                if self._attn_keys:
+                    self.pool = self._write_prefill_jit(
+                        self.pool, {k: cache[k] for k in self._attn_keys},
+                        table[slot], jnp.int32(slot),
+                        jnp.int32(len(toks)), pcfg=self.pcfg)
+                if stateful:
+                    self.spool = self._write_state_jit(
+                        self.spool, {k: cache[k] for k in self._state_keys},
+                        jnp.int32(slot), scfg=self.scfg)
             else:
                 width = self.ecfg.prefill_chunk
-                padded = toks + [0] * (width - len(toks))
+                pad = 0 if stateful else (width - len(toks))
+                padded = toks + [0] * pad
                 tok_arr = jnp.asarray(padded, jnp.int32)[None]
-                last_logits, self.pool = self._chunk_jit(
-                    self.params, self.pool, tok_arr, table, jnp.int32(slot),
-                    jnp.int32(c0), jnp.int32(len(toks)))
+                last_logits, self.pool, self.spool = self._chunk_jit(
+                    self.params, self.pool, self.spool, tok_arr, table,
+                    jnp.int32(slot), jnp.int32(c0), jnp.int32(len(toks)))
         self.metrics.prefill(plen)
         tok = int(self._sample(last_logits, [slot])[0])
         st.generated.append(tok)
@@ -364,8 +518,8 @@ class Engine:
         lens = jnp.asarray(sched.lens_vector())
         active = jnp.asarray(sched.active_mask())
         tokens = jnp.asarray(sched.tokens_vector())
-        logits, self.pool = self._decode_jit(self.params, self.pool, table,
-                                             lens, active, tokens)
+        logits, self.pool, self.spool = self._decode_jit(
+            self.params, self.pool, self.spool, table, lens, active, tokens)
         toks = self._sample(logits, list(range(self.pcfg.num_slots)))
         for slot in active_slots:
             st = sched.slots[slot]

@@ -89,7 +89,9 @@ class PoolConfig:
 
 def kv_feature_shapes(sub) -> dict[str, tuple[int, ...]]:
     """Per-token trailing feature shape of each cached tensor of a sublayer
-    (the same layouts ``models/attention.py`` caches)."""
+    (the same layouts ``models/attention.py`` caches). Recurrent mixers
+    (mamba/rwkv6) cache no per-token tensors — their O(1) state lives in
+    the slot-indexed pool of ``serve/state_cache.py`` — so they map to {}."""
     if sub.mixer_kind == "attn_gqa":
         d = sub.mixer
         return {"k": (d.num_kv_heads, d.head_dim),
@@ -97,13 +99,15 @@ def kv_feature_shapes(sub) -> dict[str, tuple[int, ...]]:
     if sub.mixer_kind == "attn_mla":
         m = sub.mixer.m
         return {"c_kv": (m.kv_lora_rank,), "k_rope": (m.qk_rope_head_dim,)}
-    raise ValueError(
-        f"paged serving supports attention mixers only, got "
-        f"{sub.mixer_kind!r} (SSM/hybrid serving is an open roadmap item)")
+    if sub.mixer_kind in ("mamba", "rwkv6"):
+        return {}
+    raise ValueError(f"unknown mixer kind {sub.mixer_kind!r}")
 
 
 def init_pool(lm, pcfg: PoolConfig) -> dict:
-    """Allocate the device half of the pool for every sublayer of ``lm``.
+    """Allocate the device half of the pool for every attention sublayer of
+    ``lm`` (recurrent sublayers get empty dicts: their state lives in the
+    ``state_cache`` pool, keyed identically for the engine's layer scan).
 
     Returns {"data": {sub_i: {name: (L, P+1, page, *feat) int8|dtype}},
              "scale_log2": {sub_i: {name: (L, num_slots) f32}}}.

@@ -39,8 +39,11 @@ class ServeMetrics:
     decode_tokens: int = 0      # tokens produced by batched decode steps
     prefill_tokens: int = 0
     preemptions: int = 0
-    cache_bytes: int = 0        # resident pool bytes (set by the engine)
+    cache_bytes: int = 0        # resident KV pool bytes (set by the engine)
     cache_bytes_fp32: int = 0   # what the same pool would cost unquantized
+    state_bytes: int = 0        # resident recurrent-state pool bytes
+                                # (SSM/RWKV sublayers; 0 for attn-only archs)
+    state_bytes_fp32: int = 0   # fp32 cost of the same state pool
 
     # ---- lifecycle hooks ----------------------------------------------
     def request_submitted(self, rid: int) -> None:
@@ -99,4 +102,8 @@ class ServeMetrics:
             "cache_bytes_fp32": self.cache_bytes_fp32,
             "cache_reduction": (self.cache_bytes_fp32 / self.cache_bytes
                                 if self.cache_bytes else 0.0),
+            "state_bytes": self.state_bytes,
+            "state_bytes_fp32": self.state_bytes_fp32,
+            "state_reduction": (self.state_bytes_fp32 / self.state_bytes
+                                if self.state_bytes else 0.0),
         }

@@ -83,11 +83,21 @@ class PageAllocator:
 
 
 class Scheduler:
-    """Slot/page bookkeeping for one engine. All state is host-side."""
+    """Slot/page bookkeeping for one engine. All state is host-side.
 
-    def __init__(self, pcfg: PoolConfig, prefill_chunk: int = 0):
+    ``paged=False`` (pure-SSM archs: every mixer carries O(1) recurrent
+    state, nothing token-paged lives in the pool): admission needs only a
+    free slot — no page reservation, no slot-capacity bound on
+    prompt+max_new_tokens — and ``ensure_page`` is trivially satisfied.
+    Preemption still works (a preempted request re-queues with its
+    generated prefix folded into the prompt; its state is rebuilt by
+    re-prefill on re-admission)."""
+
+    def __init__(self, pcfg: PoolConfig, prefill_chunk: int = 0,
+                 paged: bool = True):
         self.pcfg = pcfg
         self.prefill_chunk = prefill_chunk
+        self.paged = paged
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * pcfg.num_slots
         self.alloc = PageAllocator(pcfg.total_pages)
@@ -102,6 +112,10 @@ class Scheduler:
         if req.max_new_tokens < 1:
             raise ValueError(f"request {req.rid}: max_new_tokens must be "
                              f">= 1 (the first token comes from prefill)")
+        if not self.paged:
+            # recurrent state is O(1): no page capacity to bound against
+            self.queue.append(req)
+            return req.rid
         if len(req.prompt) + req.max_new_tokens > self.pcfg.max_len:
             raise ValueError(
                 f"request {req.rid}: prompt+max_new_tokens "
@@ -126,14 +140,18 @@ class Scheduler:
             return None
         req = self.queue[0]
         # reserve the prompt's pages plus one decode page up front
-        need = self.pcfg.pages_for(len(req.prompt) + 1)
-        pages = self.alloc.alloc(need)
-        if pages is None:
-            return None
+        pages: list[int] = []
+        if self.paged:
+            need = self.pcfg.pages_for(len(req.prompt) + 1)
+            got = self.alloc.alloc(need)
+            if got is None:
+                return None
+            pages = got
         self.queue.popleft()
         slot = free_slots[0]
         self.slot_pages[slot] = pages
-        self.page_table[slot, :need] = pages
+        if pages:
+            self.page_table[slot, :len(pages)] = pages
         st = SlotState(req, prompt_len=len(req.prompt))
         self.slots[slot] = st
         self.admission_order.append(slot)
@@ -150,6 +168,8 @@ class Scheduler:
     def ensure_page(self, slot: int) -> bool:
         """Make sure the page holding the *next* token position is mapped.
         Returns False when the pool is exhausted (caller should preempt)."""
+        if not self.paged:
+            return True
         st = self.slots[slot]
         page_idx = st.next_pos // self.pcfg.page_size
         if page_idx < len(self.slot_pages[slot]):

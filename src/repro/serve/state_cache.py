@@ -1,0 +1,235 @@
+"""Slot-indexed recurrent-state cache for SSM / RWKV serving — the peer of
+the paged KV pool (``serve/kv_cache.py``) for mixers whose serving memory is
+an O(1) per-request *state* instead of an O(T) token cache.
+
+Layout: one device tensor per (sublayer, state tensor) with shape
+``(L, num_slots, *feat)`` — ``L`` the period-stack depth consumed by the
+engine's layer scan, ``num_slots`` the decode-batch lanes.  A slot's state
+is overwritten every decode step (there is no paging: state does not grow
+with sequence length), so the pool's resident bytes are fixed at
+construction.
+
+Quantization (the ``ssm_state`` site of ``NumericsPolicy``): states are
+stored as int8 codes on the pow-2 grid with one ``scale_log2`` per (layer,
+slot, tensor), dequantized on read immediately before the recurrence step.
+Unlike the KV pool — whose scale is chosen once at prefill and reused for
+appends — the state scale is **re-chosen at every overwrite** from the
+tensor being written (``per_tensor_max``): recurrent state amplitude drifts
+with the decay dynamics, and a stale scale would either clip or waste the
+grid.  The scale tree rides next to the codes exactly like the KV pool's
+(one managed owner, zero-carried in fp mode so the engine's step pytree is
+mode-independent).
+
+Lifecycle hooks the engine drives:
+
+- ``reset_slot``       zero a slot's state on admission (a recycled slot
+                       must never leak its previous request's state);
+- ``write_prefill``    scatter the post-prompt state ``lm_forward`` returns
+                       into one slot (whole-prompt prefill);
+- ``read_layer`` / ``write_layer``  the per-layer decode primitives used
+                       inside the engine's layer scan (active-masked:
+                       inactive lanes keep their stored state);
+- ``snapshot_slot`` / ``restore_slot``  host-driven park/unpark of one
+                       slot's (codes, scales) — preemption itself needs
+                       neither (state is rebuilt by re-prefill, so evicting
+                       a slot is page-free + slot invalidation), but the
+                       pair makes suspend-without-recompute possible and is
+                       the isolation test's round-trip primitive;
+- ``pool_bytes`` / ``pool_bytes_fp32``  resident-byte telemetry folded into
+                       ``ServeMetrics`` (state_bytes next to cache_bytes).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from ..numerics import QTensor, QuantSpec, get_codec, per_tensor_max_scale_log2
+from .kv_cache import codec_backend
+
+
+def _state_spec(bits: int) -> QuantSpec:
+    """The ``ssm_state`` site: pow-2 int8 codes, per-tensor-max scale
+    re-derived at every overwrite."""
+    return QuantSpec("pow2", bits, 0, "int8", "per_tensor_max")
+
+
+@dataclass(frozen=True)
+class StateCacheConfig:
+    """Numerics of the recurrent-state pool (geometry comes from the model:
+    every sublayer's state shapes are fixed by its mixer definition)."""
+    quantized: bool = False     # int8 pow-2 storage vs natural-dtype storage
+    bits: int = 8
+
+    @property
+    def spec(self) -> QuantSpec:
+        return _state_spec(self.bits)
+
+
+# ---------------------------------------------------------------------------
+# Pool construction
+# ---------------------------------------------------------------------------
+
+def state_feature_shapes(sub, cfg) -> dict[str, tuple[tuple[int, ...], str]]:
+    """Per-slot trailing feature shape and natural dtype kind ("model" |
+    "f32") of each state tensor of one sublayer (the layouts the mixers in
+    ``models/ssm.py`` carry). Attention sublayers have no recurrent state."""
+    if sub.mixer_kind == "mamba":
+        d = sub.mixer
+        return {"conv": ((d.d_conv - 1, d.d_inner), "model"),
+                "h": ((d.d_inner, d.d_state), "f32")}
+    if sub.mixer_kind == "rwkv6":
+        d = sub.mixer
+        return {"shift": ((1, cfg.d_model), "model"),
+                "wkv": ((d.num_heads, d.head_dim, d.head_dim), "f32"),
+                "shift_ffn": ((1, cfg.d_model), "model")}
+    return {}
+
+
+def natural_dtype(kind: str, cfg):
+    return jnp.float32 if kind == "f32" else jnp.dtype(cfg.dtype)
+
+
+def init_state_pool(lm, num_slots: int, scfg: StateCacheConfig) -> dict:
+    """Allocate the device half of the state pool for every sublayer.
+
+    Returns {"data": {sub_i: {name: (L, num_slots, *feat)}},
+             "scale_log2": {sub_i: {name: (L, num_slots) f32}}}.
+    Attention sublayers get empty dicts so the pytree keys mirror the KV
+    pool's and the engine's layer scan consumes both uniformly."""
+    L = lm.n_periods
+    data: dict = {}
+    scale: dict = {}
+    for i, sub in enumerate(lm.period):
+        feats = state_feature_shapes(sub, lm.cfg)
+        data[f"sub_{i}"] = {
+            name: jnp.zeros(
+                (L, num_slots) + f,
+                jnp.int8 if scfg.quantized else natural_dtype(kind, lm.cfg))
+            for name, (f, kind) in feats.items()}
+        scale[f"sub_{i}"] = {
+            name: jnp.zeros((L, num_slots), jnp.float32) for name in feats}
+    return {"data": data, "scale_log2": scale}
+
+
+def pool_bytes(pool: dict) -> int:
+    """Resident bytes of the state pool (storage + scales)."""
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(pool))
+
+
+def pool_bytes_fp32(pool: dict) -> int:
+    """What the same state pool would cost stored in fp32 (no scales)."""
+    import numpy as np
+    return 4 * sum(int(np.prod(a.shape))
+                   for a in jax.tree_util.tree_leaves(pool["data"]))
+
+
+# ---------------------------------------------------------------------------
+# Quantize / dequantize — the ``ssm_state`` site
+# ---------------------------------------------------------------------------
+
+def _encode(vals: jax.Array, scfg: StateCacheConfig):
+    """fp -> (codes, scale_log2) with one scale per leading row (the
+    per-(layer-or-slot) axis), re-derived from max|vals| per row."""
+    spec = scfg.spec
+    step = per_tensor_max_scale_log2(
+        vals, spec, reduce_axes=tuple(range(1, vals.ndim)))
+    codes = get_codec(spec, codec_backend()).encode(
+        vals, spec, step.reshape((-1,) + (1,) * (vals.ndim - 1))).codes
+    return codes, step
+
+
+def _decode(codes: jax.Array, scale_log2: jax.Array, dtype, scfg):
+    spec = scfg.spec
+    return get_codec(spec, codec_backend()).decode(
+        QTensor(codes, scale_log2.reshape((-1,) + (1,) * (codes.ndim - 1)),
+                spec), dtype)
+
+
+# ---------------------------------------------------------------------------
+# Per-layer decode primitives (used inside the engine's layer scan)
+# ---------------------------------------------------------------------------
+
+def read_layer(data_l: jax.Array, scale_l: jax.Array, dtype,
+               scfg: StateCacheConfig) -> jax.Array:
+    """One layer's state for every slot, dequantized on read.
+    data_l: (num_slots, *feat); scale_l: (num_slots,). Returns ``dtype``."""
+    if scfg.quantized:
+        return _decode(data_l, scale_l, dtype, scfg)
+    return data_l.astype(dtype)
+
+
+def write_layer(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
+                active: jax.Array, scfg: StateCacheConfig
+                ) -> tuple[jax.Array, jax.Array]:
+    """Overwrite every active slot's state for one layer; inactive lanes
+    keep their stored codes AND scale (a parked snapshot must survive junk
+    decode traffic). new: (num_slots, *feat) fp; active: (num_slots,)."""
+    amask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    if scfg.quantized:
+        codes, step = _encode(new, scfg)
+        return (jnp.where(amask, codes, data_l),
+                jnp.where(active, step, scale_l))
+    return jnp.where(amask, new.astype(data_l.dtype), data_l), scale_l
+
+
+def write_slot(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
+               slot: jax.Array, scfg: StateCacheConfig
+               ) -> tuple[jax.Array, jax.Array]:
+    """Overwrite ONE slot's state for one layer (the chunked-prefill write:
+    end-of-chunk state carried to the next chunk). new: (*feat) fp."""
+    if scfg.quantized:
+        codes, step = _encode(new[None], scfg)
+        return data_l.at[slot].set(codes[0]), scale_l.at[slot].set(step[0])
+    return data_l.at[slot].set(new.astype(data_l.dtype)), scale_l
+
+
+# ---------------------------------------------------------------------------
+# Slot lifecycle (whole-pool, jit-safe)
+# ---------------------------------------------------------------------------
+
+def reset_slot(pool: dict, slot: jax.Array) -> dict:
+    """Zero one slot's state across all layers/tensors (admission hygiene:
+    a recycled slot never sees its previous occupant's state)."""
+    return {
+        "data": jax.tree.map(lambda a: a.at[:, slot].set(
+            jnp.zeros((), a.dtype)), pool["data"]),
+        "scale_log2": jax.tree.map(lambda a: a.at[:, slot].set(0.0),
+                                   pool["scale_log2"]),
+    }
+
+
+def write_prefill(pool: dict, state: dict, slot: jax.Array,
+                  scfg: StateCacheConfig) -> dict:
+    """Scatter a whole-prompt prefill state (from ``lm_forward``) into one
+    slot, all layers at once. state leaves: (L, 1, *feat) — the stacked
+    per-layer states the model returns for batch 1."""
+    data, scale = dict(pool["data"]), dict(pool["scale_log2"])
+    for key, kinds in state.items():
+        new_d = dict(data[key])
+        new_s = dict(scale[key])
+        for name, arr in kinds.items():
+            vals = arr[:, 0]                             # (L, *feat)
+            if scfg.quantized:
+                codes, step = _encode(vals, scfg)        # scale per layer
+                new_d[name] = new_d[name].at[:, slot].set(codes)
+                new_s[name] = new_s[name].at[:, slot].set(step)
+            else:
+                new_d[name] = new_d[name].at[:, slot].set(
+                    vals.astype(new_d[name].dtype))
+        data[key] = new_d
+        scale[key] = new_s
+    return {"data": data, "scale_log2": scale}
+
+
+def snapshot_slot(pool: dict, slot: int) -> dict:
+    """One slot's (codes, scales) across all layers — the park half of
+    suspend-without-recompute. Returns the same tree structure with the
+    slot axis indexed out."""
+    return jax.tree.map(lambda a: a[:, slot], pool)
+
+
+def restore_slot(pool: dict, snap: dict, slot: jax.Array) -> dict:
+    """Write a ``snapshot_slot`` capture back into ``slot`` (unpark)."""
+    return jax.tree.map(lambda a, s: a.at[:, slot].set(s), pool, snap)

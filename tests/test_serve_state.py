@@ -1,0 +1,326 @@
+"""repro.serve.state_cache acceptance tests — SSM/hybrid archs in the
+continuous-batching engine:
+
+(a) fp32 engine decode of staggered rwkv6/jamba requests is token-identical
+    to the static scan-carried loop (admission, decode, retirement, refill),
+    including preemption + re-prefill resume;
+(b) chunked prefill carries recurrent state across chunk boundaries exactly
+    (token-identical to whole-prompt prefill on capacity-free configs);
+(c) the int8 state cache stays within the pow-2 quantization tolerance and
+    cuts state bytes >= 3.5x vs fp32;
+(d) slot isolation: a pool-walk-style sweep of reset/write/snapshot/restore
+    shows one slot's state can never leak into another's.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.configs.base import MoEConfig
+from repro.launch.steps import make_prefill_step
+from repro.models import build_lm, init_lm, lm_decode_step
+from repro.numerics import NumericsPolicy, QuantSpec
+from repro.serve import Engine, EngineConfig, PoolConfig
+from repro.serve import state_cache as SC
+from repro.sharding import ShardPlan
+
+PLAN = ShardPlan(mesh=None)
+
+
+def _setup(arch, **over):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none", **over)
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    return cfg, lm, params
+
+
+def _prompts(cfg, n, lo, hi, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size,
+                        int(rng.randint(lo, hi + 1))).tolist()
+            for _ in range(n)]
+
+
+def _static_greedy(lm, params, prompt, gen_len, max_len):
+    """Per-request reference: whole-prompt prefill + scalar-cur_len greedy
+    decode carrying SSM state through the cache tree."""
+    prefill = jax.jit(make_prefill_step(lm, PLAN))
+    toks = jnp.asarray(prompt, jnp.int32)[None]
+    logits, cache = prefill(params, {"tokens": toks})
+    p = len(prompt)
+
+    # grow only the per-token attention leaves (keyed by name: recurrent
+    # state axes can coincide with the prompt length)
+    def pad_seq(path, a):
+        leaf = path[-1].key if hasattr(path[-1], "key") else None
+        if leaf in ("k", "v", "c_kv", "k_rope") and a.shape[2] == p:
+            pad = [(0, 0)] * a.ndim
+            pad[2] = (0, max_len - p)
+            return jnp.pad(a, pad)
+        return a
+
+    cache = jax.tree_util.tree_map_with_path(pad_seq, cache)
+    tok = int(jnp.argmax(logits[0, -1]))
+    out = [tok]
+    for j in range(gen_len - 1):
+        lg, cache = lm_decode_step(params, cache,
+                                   jnp.asarray([[tok]], jnp.int32),
+                                   jnp.int32(p + j), lm, PLAN)
+        tok = int(jnp.argmax(lg[0, -1]))
+        out.append(tok)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# (a) fp32 continuous batching == static reference, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-1.5-large"])
+def test_ssm_continuous_batching_matches_static_decode(arch):
+    cfg, lm, params = _setup(arch)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=4,
+                      quantized=False)
+    eng = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+    # staggered: 4 requests on 2 slots with different prompt/gen lengths
+    prompts = _prompts(cfg, 4, 8, 16)
+    gens = [8, 5, 7, 6]
+    rids = [eng.submit(p, max_new_tokens=g)
+            for p, g in zip(prompts, gens)]
+    res = eng.run()
+    assert sorted(res) == sorted(rids)
+    for rid, prompt, g in zip(rids, prompts, gens):
+        ref = _static_greedy(lm, params, prompt, g, pcfg.max_len)
+        assert res[rid].tokens == ref, (
+            f"{arch} req {rid}: engine {res[rid].tokens} != static {ref}")
+    s = eng.summary()
+    assert s["state_bytes"] > 0
+    if arch.startswith("rwkv6"):
+        assert s["cache_bytes"] == 0        # pure-SSM: no KV pool at all
+
+
+def test_jamba_preemption_under_page_pressure_matches_static():
+    """Hybrid: attn-page exhaustion preempts the youngest slot; its state
+    is rebuilt by re-prefill and the resumed request still matches the
+    static reference token-for-token."""
+    cfg, lm, params = _setup("jamba-1.5-large")
+    pcfg = PoolConfig(num_slots=3, page_size=4, pages_per_slot=10,
+                      num_pages=12, quantized=False)
+    eng = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+    prompts = _prompts(cfg, 3, 8, 10)
+    rids = [eng.submit(p, max_new_tokens=14) for p in prompts]
+    res = eng.run()
+    assert eng.summary()["preemptions"] >= 1
+    for rid, prompt in zip(rids, prompts):
+        ref = _static_greedy(lm, params, prompt, 14, pcfg.max_len)
+        assert res[rid].tokens == ref
+
+
+def test_rwkv6_forced_preemption_resumes_token_identical():
+    """Pure-SSM archs never exhaust pages (scheduler runs unpaged), so
+    preemption is driven explicitly: evict mid-decode, the request
+    re-queues with its generated prefix, reset-on-admit + re-prefill
+    rebuild the state, and the final tokens still match the reference."""
+    cfg, lm, params = _setup("rwkv6-1.6b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=4,
+                      quantized=False)
+    eng = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+    prompts = _prompts(cfg, 2, 8, 12, seed=7)
+    rids = [eng.submit(p, max_new_tokens=10) for p in prompts]
+    for _ in range(4):
+        eng.step()
+    assert eng.sched.preempt_youngest() is not None
+    eng.metrics.preempted()
+    res = eng.run()
+    assert eng.summary()["preemptions"] == 1
+    for rid, prompt in zip(rids, prompts):
+        ref = _static_greedy(lm, params, prompt, 10, pcfg.max_len)
+        assert res[rid].tokens == ref, (res[rid].tokens, ref)
+
+
+# ---------------------------------------------------------------------------
+# (b) chunked prefill carries state across chunks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,over", [
+    ("rwkv6-1.6b", {}),
+    # capacity-based MoE routing depends on the visible token count, so
+    # chunk-size parity needs the dense-FFN variant (the same caveat holds
+    # for attention MoE archs; see README fallback matrix)
+    ("jamba-1.5-large", {"moe": MoEConfig(num_experts=0)}),
+])
+def test_ssm_chunked_prefill_matches_whole_prompt(arch, over):
+    cfg, lm, params = _setup(arch, **over)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=6,
+                      quantized=False)
+    prompt = _prompts(cfg, 1, 24, 24)[0]
+    outs = []
+    for chunk in (0, 8, 7):     # 7: ragged tail chunk, exact-length shapes
+        eng = Engine(lm, params,
+                     EngineConfig(pool=pcfg, prefill_chunk=chunk), PLAN)
+        rid = eng.submit(prompt, max_new_tokens=6)
+        outs.append(eng.run()[rid].tokens)
+    assert outs[0] == outs[1] == outs[2], outs
+
+
+# ---------------------------------------------------------------------------
+# (c) quantized state cache: bytes + tolerance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-1.5-large"])
+def test_quantized_state_bytes_and_first_token(arch):
+    cfg, lm, params = _setup(arch)
+    prompt = _prompts(cfg, 1, 16, 16)[0]
+    res = {}
+    for q in (False, True):
+        pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=4,
+                          quantized=q)
+        eng = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+        rid = eng.submit(prompt, max_new_tokens=3)
+        res[q] = (eng.run()[rid].tokens, eng.summary())
+    # >= 3.5x state-byte reduction (int8 payload + tiny scale vectors)
+    fp_b = res[False][1]["state_bytes"]
+    q_b = res[True][1]["state_bytes"]
+    assert fp_b / q_b >= 3.5, (fp_b, q_b)
+    assert res[True][1]["state_reduction"] >= 3.5
+    # first token comes from the (unquantized) prefill logits: always equal
+    assert res[True][0][0] == res[False][0][0]
+
+
+def test_quantized_state_within_pow2_tolerance():
+    """Dequantized slot state after prefill is within half a grid step of
+    the fp state elementwise (round-to-nearest on the pow-2 grid, clip
+    allowed at the symmetric range edge)."""
+    cfg, lm, params = _setup("rwkv6-1.6b")
+    prompt = _prompts(cfg, 1, 16, 16)[0]
+    pools = {}
+    for q in (False, True):
+        pcfg = PoolConfig(num_slots=1, page_size=8, pages_per_slot=4,
+                          quantized=q)
+        eng = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+        eng.submit(prompt, max_new_tokens=1)   # prefill + retire: state is
+        eng.run()                              # the post-prompt snapshot
+        pools[q] = (eng.spool, eng.scfg)
+    from repro.numerics import qrange
+    _, hi = qrange(8)
+    for key in pools[False][0]["data"]:
+        for name, fp_leaf in pools[False][0]["data"][key].items():
+            fp = np.asarray(fp_leaf[:, 0], np.float32)          # (L, *feat)
+            codes = pools[True][0]["data"][key][name][:, 0]
+            sc = pools[True][0]["scale_log2"][key][name][:, 0]  # (L,)
+            deq = np.asarray(SC.read_layer(codes, sc, jnp.float32,
+                                           pools[True][1]))
+            step = np.exp2(np.asarray(sc)).reshape(
+                (-1,) + (1,) * (fp.ndim - 1))
+            clipped = np.abs(fp) >= step * hi
+            err = np.abs(deq - fp)
+            assert (err <= step / 2 + 1e-6)[~clipped].all(), (
+                key, name, float(err.max()))
+
+
+def test_policy_ssm_state_site_owns_state_numerics():
+    """EngineConfig.policy: the ssm_state site drives the state cache the
+    way kv_cache drives the KV pool."""
+    _, lm, params = _setup("rwkv6-1.6b")
+    pol = NumericsPolicy(enable=True).with_spec(
+        "ssm_state", QuantSpec("pow2", 4, 0, "int8", "per_tensor_max"))
+    pcfg = PoolConfig(num_slots=1, page_size=8, pages_per_slot=2,
+                      quantized=False)    # policy overrides the pool knob
+    eng = Engine(lm, params, EngineConfig(pool=pcfg, policy=pol), PLAN)
+    assert eng.scfg.quantized and eng.scfg.bits == 4
+    assert eng.scfg.spec == pol.spec_for("ssm_state")
+
+
+# ---------------------------------------------------------------------------
+# (d) slot isolation walk (the state-cache analogue of tests/pool_walk.py)
+# ---------------------------------------------------------------------------
+
+def _mini_pool(num_slots, L=2, feat=(3,), quantized=False):
+    scfg = SC.StateCacheConfig(quantized=quantized)
+    pool = {"data": {"sub_0": {"h": jnp.zeros(
+                (L, num_slots) + feat,
+                jnp.int8 if quantized else jnp.float32)}},
+            "scale_log2": {"sub_0": {"h": jnp.zeros((L, num_slots),
+                                                    jnp.float32)}}}
+    return pool, scfg
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_state_cache_slot_isolation_walk(quantized):
+    """Random reset / per-slot write / batched write / snapshot / restore
+    sequence: every slot always reads back exactly its own sentinel."""
+    num_slots, L = 3, 2
+    pool, scfg = _mini_pool(num_slots, L=L, quantized=quantized)
+    rng = np.random.RandomState(0)
+    expect = np.zeros((num_slots,), np.float32)      # sentinel per slot
+    snaps: dict[int, tuple] = {}
+
+    def check():
+        for layer in range(L):
+            got = np.asarray(SC.read_layer(
+                pool["data"]["sub_0"]["h"][layer],
+                pool["scale_log2"]["sub_0"]["h"][layer],
+                jnp.float32, scfg))
+            for s in range(num_slots):
+                want = expect[s]
+                # pow-2 8-bit grid represents 2^k exactly; sentinel values
+                # are powers of two so quantized mode stays exact
+                assert (got[s] == want).all(), (layer, s, got[s], want)
+
+    for step in range(60):
+        op = rng.choice(["reset", "write_slot", "write_batch",
+                         "snapshot", "restore"])
+        slot = int(rng.randint(num_slots))
+        if op == "reset":
+            pool = SC.reset_slot(pool, jnp.int32(slot))
+            expect[slot] = 0.0
+        elif op == "write_slot":
+            val = float(2.0 ** rng.randint(-3, 4))
+            for layer in range(L):
+                d = pool["data"]["sub_0"]["h"]
+                sc = pool["scale_log2"]["sub_0"]["h"]
+                nd, ns = SC.write_slot(d[layer], sc[layer],
+                                       jnp.full((3,), val), jnp.int32(slot),
+                                       scfg)
+                pool["data"]["sub_0"]["h"] = d.at[layer].set(nd)
+                pool["scale_log2"]["sub_0"]["h"] = sc.at[layer].set(ns)
+            expect[slot] = val
+        elif op == "write_batch":
+            active = rng.rand(num_slots) < 0.5
+            vals = 2.0 ** rng.randint(-3, 4, num_slots).astype(np.float32)
+            new = jnp.asarray(np.repeat(vals[:, None], 3, axis=1))
+            for layer in range(L):
+                d = pool["data"]["sub_0"]["h"]
+                sc = pool["scale_log2"]["sub_0"]["h"]
+                nd, ns = SC.write_layer(d[layer], sc[layer], new,
+                                        jnp.asarray(active), scfg)
+                pool["data"]["sub_0"]["h"] = d.at[layer].set(nd)
+                pool["scale_log2"]["sub_0"]["h"] = sc.at[layer].set(ns)
+            expect[active] = vals[active]
+        elif op == "snapshot":
+            snaps[slot] = (SC.snapshot_slot(pool, slot), expect[slot])
+        elif op == "restore" and slot in snaps:
+            snap, val = snaps[slot]
+            pool = SC.restore_slot(pool, snap, jnp.int32(slot))
+            expect[slot] = val
+        check()
+
+
+def test_state_pool_reset_on_admit_isolates_recycled_slots():
+    """A slot recycled across requests starts from zero state: two engines
+    — one fresh, one that already served a different request on the same
+    slot — produce identical tokens for the same prompt."""
+    cfg, lm, params = _setup("rwkv6-1.6b")
+    pcfg = PoolConfig(num_slots=1, page_size=8, pages_per_slot=4,
+                      quantized=False)
+    prompts = _prompts(cfg, 2, 8, 12, seed=11)
+
+    fresh = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+    rid = fresh.submit(prompts[1], max_new_tokens=6)
+    want = fresh.run()[rid].tokens
+
+    used = Engine(lm, params, EngineConfig(pool=pcfg), PLAN)
+    used.submit(prompts[0], max_new_tokens=6)
+    used.run()                                   # dirties slot 0's state
+    rid2 = used.submit(prompts[1], max_new_tokens=6)
+    assert used.run()[rid2].tokens == want
