@@ -50,6 +50,7 @@ def bench_cell(site: str, spec, backend: str, n: int, iters: int) -> dict:
         "kind": spec.kind,
         "bits": spec.bits,
         "block": spec.block,
+        "storage": spec.storage_dtype,
         "backend": backend,
         "elements": n,
         "encode_s": t_enc,
@@ -63,6 +64,8 @@ def bench_cell(site: str, spec, backend: str, n: int, iters: int) -> dict:
 
 
 def run_sweep(n: int, iters: int) -> dict:
+    import dataclasses
+
     from repro import numerics as N
 
     pol = N.NumericsPolicy(enable=True)
@@ -71,6 +74,13 @@ def run_sweep(n: int, iters: int) -> dict:
         spec = pol.spec_for(site)
         for backend in N.BACKENDS:
             cells.append(bench_cell(site, spec, backend, n, iters))
+    # the packed-int4 deploy format (two codes per byte): tt_factor spec
+    # with int4x2 storage — the ckpt export path's codec
+    deploy = dataclasses.replace(pol.spec_for("tt_factor"),
+                                 storage_dtype="int4x2")
+    for backend in N.BACKENDS:
+        cells.append(bench_cell("tt_factor_deploy", deploy, backend, n,
+                                iters))
     return {
         "bench": "quant_codec",
         "device": str(jax.devices()[0]),

@@ -1,0 +1,192 @@
+"""Train-wire memory/time benchmark: the paper's Table-1 as a JSON artifact.
+
+Runs one jitted low-precision train step on the FMNIST TT config (4-bit TT
+cores, 8-bit activations, 16-bit gradients, blockwise-int8 Adam moments,
+blockwise-int8 gradient wire, packed-int4x2 deploy export) and the fp32
+dense shadow, then emits per-NumericsPolicy-site measured bytes plus the
+aggregate reduction (``reduction_x``) and step timings
+(``BENCH_train_wire.json``). CI smoke asserts ``reduction_x >= 8``.
+
+``fmnist_low_precision_step`` / ``fmnist_site_table`` are the single owners
+of the step construction and the per-site byte accounting —
+tests/test_train_wire.py imports THIS module so the executable test and the
+bench artifact can never drift apart.
+
+    PYTHONPATH=src python benchmarks/train_wire.py
+    PYTHONPATH=src python benchmarks/train_wire.py --smoke --out /tmp/b.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def act_shapes(batch: int) -> list[tuple[int, int]]:
+    """The MLP's three activation quant-edge sites (input/hidden/output)."""
+    return [(batch, 896), (batch, 512), (batch, 16)]
+
+
+def fmnist_low_precision_step(batch: int = 64, opt_dtype: str = "int8",
+                              compress: bool = True) -> dict:
+    """Build and run ONE jitted low-precision FMNIST train step (the
+    paper's full wire: 4-bit cores / 8-bit acts / 16-bit grads / int8
+    moments / int8 wire). Returns everything the accounting and timing
+    need."""
+    from repro.configs.base import TrainConfig
+    from repro.models import mlp_tt as MLP
+    from repro.optim import adam as A
+    from repro.optim.grad_compress import compress_decompress
+
+    d = MLP.make_mlp(prior=True, quantize=True)
+    params = MLP.init_mlp(jax.random.PRNGKey(0), d)
+    policy = d.qc.policy()
+    wire_spec = policy.spec_for("dp_wire")
+    tcfg = TrainConfig(learning_rate=3e-3, weight_decay=0.0,
+                       opt_state_dtype=opt_dtype)
+    opt = A.init_adam(params, tcfg)
+
+    @jax.jit
+    def step(params, opt, batch, residual):
+        loss, grads = jax.value_and_grad(MLP.mlp_loss, allow_int=True)(
+            params, batch, d)
+        if compress:
+            grads, residual = compress_decompress(grads, residual,
+                                                  wire_spec)
+        params, opt = A.adam_update(params, grads, opt, jnp.asarray(3e-3),
+                                    tcfg)
+        params = MLP.mlp_lambda_update(params, d)
+        params = MLP.mlp_scale_update(params, batch, grads, d)
+        return params, opt, loss, grads, residual
+
+    rng = np.random.RandomState(0)
+    b = {"x": jnp.asarray(rng.normal(size=(batch, 896)), jnp.float32),
+         "y": jnp.asarray(rng.randint(0, 10, batch), jnp.int32)}
+    new_params, opt, loss, grads, residual = step(params, opt, b, None)
+    return {"d": d, "params": params, "new_params": new_params, "opt": opt,
+            "loss": loss, "grads": grads, "residual": residual,
+            "policy": policy, "step": step, "batch_arrays": b,
+            "batch": batch}
+
+
+def fmnist_site_table(result: dict,
+                      deploy_path: str | None = None
+                      ) -> tuple[dict, dict, dict]:
+    """Per-site measured bytes for one low-precision step vs the fp32 dense
+    baseline (the paper's Table-1 comparison). Returns (sites, baseline,
+    deploy_stats) — sites/baseline keyed by NumericsPolicy site name,
+    deploy_stats the ``export_tt_deploy`` byte accounting."""
+    from repro import numerics as N
+    from repro.ckpt import export_tt_deploy
+
+    policy = result["policy"]
+    batch = result["batch"]
+    wire_spec = policy.spec_for("dp_wire")
+    if deploy_path is None:
+        deploy_path = os.path.join(tempfile.mkdtemp(), "deploy.ckpt")
+    deploy = export_tt_deploy(deploy_path, result["new_params"],
+                              policy=policy)
+    shapes = act_shapes(batch)
+    sites = {
+        # tt_factor: the packed int4x2 deploy export (two codes per byte)
+        "tt_factor": deploy["packed_bytes"],
+        # activation: the quant-edge sites at 8-bit, via policy.nbytes
+        "activation": sum(policy.nbytes("activation", s) for s in shapes),
+        # optimizer_moment: resident bytes of the int8 m/v QTensors
+        "optimizer_moment": sum(
+            m.nbytes() for m in (*result["opt"].m, *result["opt"].v)
+            if isinstance(m, N.QTensor)),
+        # dp_wire: int8 codes + block scales of each float gradient leaf
+        "dp_wire": sum(
+            N.encode(np.asarray(g).reshape(-1), wire_spec).nbytes()
+            for g in jax.tree_util.tree_leaves(result["grads"])
+            if hasattr(g, "dtype")
+            and jnp.issubdtype(g.dtype, jnp.floating)),
+    }
+    dense_w = (896 * 512 + 512 * 16 + 512 + 16) * 4
+    baseline = {
+        "tt_factor": dense_w,
+        "activation": sum(int(np.prod(s)) * 4 for s in shapes),
+        "optimizer_moment": 2 * dense_w,
+        "dp_wire": dense_w,
+    }
+    return sites, baseline, deploy
+
+
+def _time(fn, *args, iters: int, warmup: int = 1) -> float:
+    out = None
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run(batch: int, iters: int) -> dict:
+    low = fmnist_low_precision_step(batch)
+    sites, baseline, deploy = fmnist_site_table(low)
+    t_q = _time(lambda: low["step"](low["new_params"], low["opt"],
+                                    low["batch_arrays"], low["residual"]),
+                iters=iters)
+
+    # fp32 shadow (no compression, f32 moments)
+    fp = fmnist_low_precision_step(batch, opt_dtype="float32",
+                                   compress=False)
+    t_f = _time(lambda: fp["step"](fp["new_params"], fp["opt"],
+                                   fp["batch_arrays"], None), iters=iters)
+
+    total = sum(sites.values())
+    base = sum(baseline.values())
+    return {
+        "bench": "train_wire",
+        "device": str(jax.devices()[0]),
+        "jax_backend": jax.default_backend(),
+        "batch": batch,
+        "iters": iters,
+        "loss_low_precision": float(low["loss"]),
+        "loss_fp32": float(fp["loss"]),
+        "step_ms_low_precision": t_q * 1e3,
+        "step_ms_fp32": t_f * 1e3,
+        "site_bytes": sites,
+        "fp32_baseline_bytes": baseline,
+        "total_bytes": total,
+        "fp32_total_bytes": base,
+        "reduction_x": base / total,
+        "tt_deploy_reduction_x": deploy["reduction_x"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--iters", type=int, default=10)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny iteration count for CI")
+    ap.add_argument("--out", default="BENCH_train_wire.json")
+    args = ap.parse_args()
+
+    doc = run(args.batch, 2 if args.smoke else args.iters)
+    text = json.dumps(doc, indent=2)
+    if args.out == "-":
+        sys.stdout.write(text + "\n")
+    else:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"[train_wire] reduction {doc['reduction_x']:.1f}x "
+              f"(sites {doc['site_bytes']}) "
+              f"step {doc['step_ms_low_precision']:.1f} ms "
+              f"(fp32 {doc['step_ms_fp32']:.1f} ms) -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -74,3 +74,14 @@ def main():
           f"(paper: 90 ms on the FPGA, 5340 ms on a Pi 3B)")
     deploy = quantize_for_deploy(params, d.qc)   # 4-bit cores for inference
     _ = deploy
+    if d.qc.enable:
+        # packed int4x2 deploy artifact: two codes per byte on disk
+        from repro.ckpt import export_tt_deploy
+        stats = export_tt_deploy("/tmp/fmnist_tt_deploy.ckpt", params)
+        print(f"deploy export: {stats['packed_bytes']:,} B packed int4 "
+              f"cores ({stats['reduction_x']:.1f}x vs fp32) "
+              f"-> /tmp/fmnist_tt_deploy.ckpt")
+
+
+if __name__ == "__main__":
+    main()

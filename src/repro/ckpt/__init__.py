@@ -1,3 +1,4 @@
 from . import checkpoint  # noqa: F401
-from .checkpoint import (AsyncCheckpointer, install_preemption_handler,  # noqa: F401
-                         latest_step, load, save, step_path)
+from .checkpoint import (AsyncCheckpointer, export_tt_deploy,  # noqa: F401
+                         install_preemption_handler, latest_step, load,
+                         load_tt_deploy, save, step_path)

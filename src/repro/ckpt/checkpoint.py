@@ -189,6 +189,132 @@ class AsyncCheckpointer:
         self._thread.join(timeout=10)
 
 
+# ---------------------------------------------------------------------------
+# TT-factor deploy export (packed int4)
+# ---------------------------------------------------------------------------
+
+def export_tt_deploy(path: str, params, policy=None) -> dict:
+    """Export trained TT cores in the packed-int4 deploy format.
+
+    Every ``core_n`` leaf is encoded through the policy's ``tt_factor``
+    codec with ``storage_dtype="int4x2"`` (two codes per byte, the
+    3U-EdgeAI-style int4 deploy layout) at its fixed per-core
+    ``wscale_log2`` step; stacked (vmapped-over-layer) cores carry their
+    per-stack scale via the codec's leading-dim broadcast. All other leaves
+    (biases, λ, norms, scale exponents) are stored as-is.
+
+    Saved with the standard msgpack(+zstd) container: codes under
+    ``<key>§q``, scales under ``<key>§scale``, the spec + logical shape in
+    ``meta["tt_deploy"]``. Returns byte accounting:
+    ``{"packed_bytes", "fp32_bytes", "reduction_x"}`` over the core leaves.
+    """
+    import dataclasses as _dc
+
+    from ..numerics import QuantSpec, encode
+    from ..numerics.policy import NumericsPolicy
+
+    spec = (policy or NumericsPolicy(enable=True)).spec_for("tt_factor")
+    spec = _dc.replace(spec, storage_dtype="int4x2")
+
+    arrays: dict[str, np.ndarray] = {}
+    deploy_meta: dict[str, dict] = {}
+    packed_bytes = 0
+    fp32_bytes = 0
+
+    def visit(tree, prefix: str):
+        nonlocal packed_bytes, fp32_bytes
+        if not isinstance(tree, dict):
+            return
+        steps = tree.get("wscale_log2")
+        for k, v in tree.items():
+            key = f"{prefix}{_SEP}{k}" if prefix else k
+            if isinstance(v, dict):
+                visit(v, key)
+            elif k.startswith("core_") and steps is not None:
+                n = int(k.split("_")[1])
+                scale = jnp.asarray(steps)[..., n].astype(jnp.float32)
+                core = jnp.asarray(v)
+                # flatten each (R, J, I, R') core (keeping any stacked
+                # leading dims) so the nibble pairing runs over the whole
+                # core — a trailing rank of 1 would otherwise store one
+                # nibble per byte
+                stack = core.shape[:-4]
+                qt = encode(core.reshape(stack + (-1,)), spec, scale)
+                arrays[key + _SEP + "q"] = np.asarray(qt.codes)
+                arrays[key + _SEP + "scale"] = np.asarray(qt.scale)
+                deploy_meta[key] = {"spec": spec.to_json_dict(),
+                                    "shape": list(core.shape)}
+                packed_bytes += qt.nbytes()
+                fp32_bytes += int(core.size) * 4
+            elif hasattr(v, "shape"):
+                arrays[key] = np.asarray(jax.device_get(v))
+            else:
+                # container leaves (e.g. ActQuant scale sites): flatten to
+                # per-leaf arrays; load_tt_deploy returns them dict-shaped
+                for kp, leaf in jax.tree_util.tree_flatten_with_path(v)[0]:
+                    sub = _SEP.join(str(getattr(p, "key",
+                                                getattr(p, "idx", p)))
+                                    for p in kp)
+                    arrays[key + _SEP + sub] = \
+                        np.asarray(jax.device_get(leaf))
+
+    visit(params, "")
+    stats = {"packed_bytes": int(packed_bytes), "fp32_bytes": int(fp32_bytes),
+             "reduction_x": fp32_bytes / max(packed_bytes, 1)}
+    blob = _encode(arrays, {"format": "tt_deploy", "tt_deploy": deploy_meta,
+                            "stats": stats})
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        f.write(blob)
+    os.replace(tmp, path)
+    return stats
+
+
+def load_tt_deploy(path: str, dequantize: bool = True):
+    """Load a deploy export. With ``dequantize`` the cores come back as f32
+    values on the 4-bit grid in their original (R, J, I, R') shapes (ready
+    for ``ttm_matvec``); otherwise as ``numerics.QTensor`` packed
+    containers in the flattened-per-core export layout. Returns
+    (params, meta)."""
+    from ..numerics import QTensor, QuantSpec, decode
+
+    with open(path, "rb") as f:
+        arrays, meta = _decode(f.read())
+    deploy = meta.get("tt_deploy", {})
+
+    out: dict = {}
+
+    def put(key: str, value):
+        parts = key.split(_SEP)
+        node = out
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = value
+
+    seen = set()
+    for key in arrays:
+        base = key[:-len(_SEP + "q")] if key.endswith(_SEP + "q") else None
+        if base is not None and base in deploy:
+            if base in seen:
+                continue
+            seen.add(base)
+            info = deploy[base]
+            spec = QuantSpec.from_json_dict(info["spec"])
+            shape = tuple(info["shape"])
+            flat_shape = shape[:-4] + (int(np.prod(shape[-4:])),)
+            qt = QTensor(jnp.asarray(arrays[base + _SEP + "q"]),
+                         jnp.asarray(arrays[base + _SEP + "scale"]),
+                         spec, flat_shape)
+            put(base, decode(qt).reshape(shape) if dequantize else qt)
+        elif key.endswith(_SEP + "scale") and key[:-len(_SEP + "scale")] \
+                in deploy:
+            continue
+        else:
+            put(key, jnp.asarray(arrays[key]))
+    return out, meta
+
+
 def install_preemption_handler(fn: Callable[[], None]):
     """Run ``fn`` (an emergency checkpoint flush) on SIGTERM."""
     def handler(signum, frame):

@@ -32,7 +32,8 @@ from ..numerics.spec import QuantSpec, qrange
 
 __all__ = ["qrange", "fake_quant", "quantize_store", "ScaleState",
            "init_scale", "update_scale", "quant_act", "ActQuant",
-           "init_act_quant", "quant_edge", "update_act_quant"]
+           "init_act_quant", "quant_edge", "quant_edge_shared",
+           "update_act_quant"]
 
 # canonical §3.2 Q(.) with clipped STE — one implementation, shared with the
 # Pallas codec backend (numerics/pallas_backend.py wraps the same vjp)
@@ -109,6 +110,17 @@ def quant_edge(x: jax.Array, site: ActQuant, act_bits: int, grad_bits: int) -> j
     """
     return _quant_edge(x, site.act.log2, site.grad.log2, site.probe,
                        act_bits, grad_bits)
+
+
+def quant_edge_shared(x: jax.Array, act: ScaleState, grad: ScaleState,
+                      act_bits: int, grad_bits: int) -> jax.Array:
+    """The zoo-LM form of ``quant_edge``: an (act_bits fwd, grad_bits bwd)
+    quantization point driven by the policy's SHARED managed scales (one
+    ``ScaleState`` owner per site across the whole stack, no per-tensor
+    probe — the §3.3 statistic is observed at the step level instead;
+    see ``models/lm.py::_act_quant_edge`` / ``launch/steps.py``)."""
+    site = ActQuant(act, grad, jnp.zeros((), jnp.float32))
+    return quant_edge(x, site, act_bits, grad_bits)
 
 
 def update_act_quant(site: ActQuant, x: jax.Array, grad_stat: jax.Array | None,

@@ -32,14 +32,35 @@ def _blk(dim: int, pref: int, floor: int) -> int:
     return max(floor, ((dim + floor - 1) // floor) * floor)
 
 
-@functools.partial(jax.jit, static_argnames=("bits",))
+@functools.partial(jax.jit, static_argnames=("bits", "impl"))
 def pe1(z: jax.Array, g: jax.Array, step_log2: float | None = None,
-        bits: int | None = None) -> jax.Array:
-    """PE1 (Eq. 5): Z(a,b,c) x G(b,d,c) -> (a,d), optional fused requantize.
+        bits: int | None = None, impl: str = "pallas") -> jax.Array:
+    """PE1 (Eq. 5): Z(a,b,c) x G(b,d,c) -> (a,d), optional fused requantize
+    (``bits`` selects the pow2 grid at ``step_log2``; the epilogue body is
+    the codec registry's, shared with the unfused reference path).
+
+    impl: "pallas" (the kernel; compiled on TPU, interpret elsewhere — PE1
+    is a training kernel, so unlike ``paged_attention`` there is no hot
+    off-TPU serve path to protect and the kernel stays the default) or
+    "jnp" — the registry-composed reference (einsum + codec encode→decode),
+    the oracle the differential tests pin the fused epilogue against.
 
     Re-layout: G(b,d,c) -> (b*c, d); Z(a,b,c) -> (a, b*c). Cores are KB-sized
     so the one-off G transpose is free relative to the contraction.
     """
+    from ..numerics import QuantSpec
+    spec = QuantSpec("pow2", bits) if bits is not None else None
+    step = 0.0 if step_log2 is None else step_log2
+    if impl == "jnp":
+        from ..numerics.codecs import get_codec
+        from . import ref
+        acc = ref.pe1_ref(z, g).astype(jnp.float32)
+        if spec is not None:
+            acc = get_codec(spec, "reference").epilogue(
+                acc, spec, jnp.asarray(step, jnp.float32))
+        return acc.astype(z.dtype)
+    if impl != "pallas":
+        raise ValueError(f"unknown pe1 impl {impl!r}")
     a, b, c = z.shape
     b2, d, c2 = g.shape
     assert b == b2 and c == c2, (z.shape, g.shape)
@@ -50,10 +71,8 @@ def pe1(z: jax.Array, g: jax.Array, step_log2: float | None = None,
     bk = _blk(b * c, 512, 128)
     zp = _pad_to(zf, (bm, bk))
     gp = _pad_to(gf, (bk, bn))
-    out = ttm_pe1.pe1_matmul(zp, gp, bm=bm, bn=bn, bk=bk,
-                             bits=bits,
-                             step_log2=0.0 if step_log2 is None else step_log2,
-                             interpret=_interpret())
+    out = ttm_pe1.pe1_matmul(zp, gp, bm=bm, bn=bn, bk=bk, spec=spec,
+                             step_log2=step, interpret=_interpret())
     return out[:a, :d]
 
 

@@ -10,6 +10,11 @@ factors in BRAM). The kernel is then a K-accumulating tiled MXU matmul with
 fp32 accumulation in VMEM scratch and an optional fused requantize epilogue
 (the FPGA PE writes quantized results back to DRAM; we mirror that).
 
+The epilogue body is NOT hand-rolled here: it comes from the codec registry
+(``numerics.codecs`` pow2 ``epilogue``), so the fused writeback and the
+unfused encode→decode reference path share one round/clip/scale
+implementation — tests/test_kernels.py asserts they are bit-identical.
+
 Grid: (M/bm, N/bn, K/bk), K iterates fastest (TPU sequential grid) so the
 accumulator lives across the K steps of one (m, n) tile.
 """
@@ -22,9 +27,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ..numerics.codecs import get_codec
+from ..numerics.spec import QuantSpec
+
 
 def _pe1_kernel(step_ref, z_ref, g_ref, o_ref, acc_ref, *, n_k: int,
-                bits: int | None):
+                spec: QuantSpec | None):
     k = pl.program_id(2)
 
     @pl.when(k == 0)
@@ -40,26 +48,26 @@ def _pe1_kernel(step_ref, z_ref, g_ref, o_ref, acc_ref, *, n_k: int,
     @pl.when(k == n_k - 1)
     def _store():
         acc = acc_ref[...]
-        if bits is not None:
-            scale = jnp.exp2(step_ref[0].astype(jnp.float32))
-            lo = -(2.0 ** (bits - 1))
-            hi = 2.0 ** (bits - 1) - 1.0
-            acc = jnp.clip(jnp.round(acc / scale), lo, hi) * scale
+        if spec is not None:
+            # registry-owned requant epilogue (kernel-safe jnp body)
+            acc = get_codec(spec, "reference").epilogue(acc, spec, step_ref[0])
         o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def pe1_matmul(z2d: jax.Array, g2d: jax.Array, *, bm: int = 128, bn: int = 128,
-               bk: int = 512, bits: int | None = None,
+               bk: int = 512, spec: QuantSpec | None = None,
                step_log2: jax.Array | float = 0.0,
                interpret: bool = True) -> jax.Array:
     """(M, K) @ (K, N) with fp32 accumulation; inputs must be pre-padded to
-    block multiples (ops.py handles padding/unpadding)."""
+    block multiples (ops.py handles padding/unpadding). ``spec`` selects the
+    fused requantize epilogue (pow2, ``spec.bits``-bit grid at
+    ``step_log2``)."""
     m, k = z2d.shape
     k2, n = g2d.shape
     assert k == k2 and m % bm == 0 and n % bn == 0 and k % bk == 0, \
         (z2d.shape, g2d.shape, bm, bn, bk)
     n_k = k // bk
-    kernel = functools.partial(_pe1_kernel, n_k=n_k, bits=bits)
+    kernel = functools.partial(_pe1_kernel, n_k=n_k, spec=spec)
     step = jnp.asarray(step_log2, jnp.float32).reshape(1)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,

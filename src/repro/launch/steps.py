@@ -86,9 +86,14 @@ def _ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
 
 
 def make_loss_fn(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
+    """Loss over one batch. ``loss_fn(params, batch, scales=None)``: with a
+    managed scale-state tree (``TrainState.scales``) the forward runs the
+    policy's ``activation`` quant edges and the aux output carries the
+    observed activation statistic alongside the metrics:
+    ``loss, (metrics, obs) = loss_fn(...)``."""
     cfg = lm.cfg
 
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, scales=None):
         kwargs = {}
         if cfg.frontend == "audio":
             kwargs["embeds"] = batch["frames"]
@@ -97,7 +102,12 @@ def make_loss_fn(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
             kwargs["tokens"] = batch["tokens"]
         else:
             kwargs["tokens"] = batch["tokens"]
-        logits, aux, _ = lm_forward(params, lm, plan, **kwargs)
+        if scales is not None:
+            logits, aux, _, obs = lm_forward(params, lm, plan,
+                                             scales=scales, **kwargs)
+        else:
+            logits, aux, _ = lm_forward(params, lm, plan, **kwargs)
+            obs = {}
         labels = batch["labels"]
         if cfg.frontend == "vision":
             # loss on the text positions only (the last len(labels) positions)
@@ -111,7 +121,7 @@ def make_loss_fn(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
             denom = float(labels.shape[0] * labels.shape[1]) * tcfg.total_steps
             prior = lm_prior_loss(params, lm) / denom
         metrics = {"ce": ce, "aux": aux, "prior": prior}
-        return loss + prior, metrics
+        return loss + prior, (metrics, obs)
 
     return loss_fn
 
@@ -121,17 +131,25 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
     policy = lm.cfg.quant.policy()
 
     def train_step(state: TrainState, batch):
-        (loss, metrics), grads = jax.value_and_grad(
-            loss_fn, has_aux=True, allow_int=True)(state.params, batch)
+        (loss, (metrics, obs)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True, allow_int=True)(state.params, batch,
+                                                   state.scales)
+        scales = state.scales
+        if scales is not None and obs:
+            # §3.3 activation scale manager: advance on the forward's
+            # observed mean |activation| (lm_forward's ``activation`` edges)
+            scales = policy.update_scales(scales, obs)
         residual = state.residual
         if tcfg.grad_compress:
             # int8-valued grads + error feedback BEFORE the DP reduce:
             # the all-reduce then moves 1/4 the wire bytes — the ``dp_wire``
-            # site of the numerics policy (optim/grad_compress)
+            # site of the numerics policy (optim/grad_compress); on real
+            # meshes ``grad_compress.psum_int8`` is the shard_map collective
+            # that puts the int8 codes themselves on the wire
             from ..optim.grad_compress import compress_decompress
             grads, residual = compress_decompress(
                 grads, residual, policy.spec_for("dp_wire"))
-        grads, scales = _quantize_grad_edge(grads, state.scales, policy)
+        grads, scales = _quantize_grad_edge(grads, scales, policy)
         if tcfg.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         else:
@@ -161,26 +179,35 @@ def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
 
     def train_step(state: TrainState, batch):
         def micro(carry, mb):
-            gsum, lsum = carry
-            (loss, _), g = jax.value_and_grad(
-                loss_fn, has_aux=True, allow_int=True)(state.params, mb)
+            gsum, lsum, osum = carry
+            (loss, (_, obs)), g = jax.value_and_grad(
+                loss_fn, has_aux=True, allow_int=True)(state.params, mb,
+                                                       state.scales)
             gsum = jax.tree.map(
                 lambda a, b: a + b if hasattr(b, "dtype")
                 and b.dtype != jax.dtypes.float0 else a, gsum, g)
-            return (gsum, lsum + loss), None
+            if "activation" in obs:
+                osum = osum + obs["activation"]
+            return (gsum, lsum + loss, osum), None
 
         zeros = jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32)
             if jnp.issubdtype(p.dtype, jnp.floating) else
             jnp.zeros((), jnp.float32), state.params)
-        (gsum, lsum), _ = jax.lax.scan(micro, (zeros, jnp.zeros(())), batch)
+        (gsum, lsum, osum), _ = jax.lax.scan(
+            micro, (zeros, jnp.zeros(()), jnp.zeros((1,))), batch)
         grads = jax.tree.map(lambda g: g / n_micro, gsum)
+        scales = state.scales
+        if scales is not None and "activation" in scales \
+                and lm.cfg.quant.enable:
+            scales = policy.update_scales(
+                scales, {"activation": osum / n_micro})
         residual = state.residual
         if tcfg.grad_compress:
             from ..optim.grad_compress import compress_decompress
             grads, residual = compress_decompress(
                 grads, residual, policy.spec_for("dp_wire"))
-        grads, scales = _quantize_grad_edge(grads, state.scales, policy)
+        grads, scales = _quantize_grad_edge(grads, scales, policy)
         if tcfg.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
         else:

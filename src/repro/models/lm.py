@@ -253,6 +253,18 @@ def _sub_forward(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
     return x, aux, cache
 
 
+def _act_quant_edge(x: jax.Array, scales: dict, cfg: ModelConfig) -> jax.Array:
+    """Policy-owned ``activation`` site for the zoo LMs: fake-quant the
+    residual stream forward at ``act_bits`` and the incoming activation-
+    gradient backward at ``grad_bits`` (clipped STE), with the SHARED
+    managed scales from the ``TrainState.scales`` tree — the same §3.2/§3.3
+    edge the FMNIST MLP carries per-tensor, scaled to one scale-owner per
+    site across the whole stack (the policy's managed ScaleState)."""
+    from ..core.quant import quant_edge_shared
+    return quant_edge_shared(x, scales["activation"], scales["grad_edge"],
+                             cfg.quant.act_bits, cfg.quant.grad_bits)
+
+
 def _remat_wrap(fn, cfg: ModelConfig):
     if cfg.remat == "none":
         return fn
@@ -267,16 +279,28 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
                tokens: jax.Array | None = None,
                embeds: jax.Array | None = None,
                return_cache: bool = False,
-               token_mask: jax.Array | None = None):
+               token_mask: jax.Array | None = None,
+               scales: dict | None = None):
     """Train/prefill forward.
 
     tokens: (B, S) int32 and/or embeds: (B, P, D) frontend outputs (vlm:
     embeds are prepended to token embeddings; audio: embeds replace them).
     token_mask: optional (B, S) bool of real positions — padding (serve
     whole-prompt prefill buckets) is excluded from MoE capacity routing.
-    Returns (logits, aux, cache|None).
+    scales: optional NumericsPolicy managed scale-state tree
+    (``TrainState.scales``). When given (and ``cfg.quant.enable``) the
+    ``activation`` site goes live: the residual stream is fake-quantized at
+    every sublayer boundary (plus the embedding output) with the shared
+    managed scales, and the return gains a 4th element ``obs`` — the
+    per-layer mean |activation| statistic the scale manager consumes
+    (``policy.update_scales(scales, obs)`` in the train step).
+    Returns (logits, aux, cache|None) or (logits, aux, cache|None, obs).
     """
     cfg = lm.cfg
+    # the edge quantizes fwd AND bwd, so both managed sites must be present
+    # (a custom policy may demote either to fixed/per-tensor-max scales)
+    quant_acts = (scales is not None and cfg.quant.enable
+                  and "activation" in scales and "grad_edge" in scales)
     if embeds is not None and tokens is not None:
         xt = embed_tokens(params, tokens, lm)
         x = jnp.concatenate([embeds.astype(xt.dtype), xt], axis=1)
@@ -286,28 +310,40 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
         x = embed_tokens(params, tokens, lm)
     b, s, _ = x.shape
     x = plan.hidden(x)
+    if quant_acts:
+        x = _act_quant_edge(x, scales, cfg)
     positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
 
     def body(carry, pp):
-        x, aux = carry
+        x, aux, amean = carry
         caches = {}
         for i, sub in enumerate(lm.period):
             x, a, c = _sub_forward(pp[f"sub_{i}"], x, sub, cfg, plan,
                                    positions, return_cache=return_cache,
                                    token_mask=token_mask)
+            if quant_acts:
+                x = _act_quant_edge(x, scales, cfg)
             aux = aux + a
             caches[f"sub_{i}"] = c
-        return (x, aux), caches
+        if quant_acts:
+            amean = amean + jnp.mean(jnp.abs(
+                jax.lax.stop_gradient(x).astype(jnp.float32)))
+        return (x, aux, amean), caches
 
     body = _remat_wrap(body, cfg)
-    (x, aux), caches = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)),
-                                    params["layers"])
+    (x, aux, amean), caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        params["layers"])
     x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = apply_site(params["head"], x, lm.head, cfg)
     if cfg.logits_softcap > 0:
         logits = jnp.tanh(logits / cfg.logits_softcap) * cfg.logits_softcap
     logits = plan.logits(logits)
-    return logits, aux, (caches if return_cache else None)
+    cache = caches if return_cache else None
+    if scales is None:
+        return logits, aux, cache
+    obs = {"activation": (amean / lm.n_periods)[None]} if quant_acts else {}
+    return logits, aux, cache, obs
 
 
 def sub_ffn_decode(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,

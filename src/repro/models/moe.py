@@ -119,14 +119,9 @@ def _route(params, x2d, d: MoEDef, cfg: ModelConfig, mask=None):
 
 
 def _shard_map(f, mesh, in_specs, out_specs):
-    """Version-compat shard_map: ``jax.shard_map`` (new API, check_vma)
-    with fallback to ``jax.experimental.shard_map`` (check_rep)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
+    """Version-compat shard_map (shared shim: see sharding.py)."""
+    from ..sharding import compat_shard_map
+    return compat_shard_map(f, mesh, in_specs, out_specs)
 
 
 def _expert_glu(eparams, xe, d: MoEDef, cfg: ModelConfig):

@@ -39,6 +39,30 @@ import jax.numpy as jnp
 from .spec import QTensor, QuantSpec, qrange
 
 
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int4 codes (values in [-8, 7]) two-per-byte along the trailing
+    axis. Odd trailing dims get one zero pad nibble (the high nibble of the
+    last byte). Returns int8 of shape ``q.shape[:-1] + (ceil(last/2),)``."""
+    last = q.shape[-1]
+    v = q.astype(jnp.int32)
+    if last % 2:
+        v = jnp.pad(v, [(0, 0)] * (v.ndim - 1) + [(0, 1)])
+    lo = v[..., 0::2] & 0xF
+    hi = v[..., 1::2] & 0xF
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array, last: int) -> jax.Array:
+    """Inverse of ``pack_int4``: int8 bytes -> int32 codes in [-8, 7] of
+    trailing dim ``last`` (the pad nibble, if any, is sliced away)."""
+    v = packed.astype(jnp.int32) & 0xFF
+    lo = ((v & 0xF) ^ 8) - 8                 # sign-extend each nibble
+    hi = ((v >> 4) ^ 8) - 8
+    q = jnp.stack([lo, hi], axis=-1).reshape(
+        packed.shape[:-1] + (packed.shape[-1] * 2,))
+    return q[..., :last]
+
+
 def _bcast(scale: jax.Array, ndim: int) -> jax.Array:
     """Right-pad ``scale``'s shape with 1s so it broadcasts against the
     *leading* dims of an ndim-D tensor (the kv-cache layout: one scale per
@@ -92,12 +116,33 @@ class Pow2Reference:
         lo, hi = qrange(spec.bits)
         step = jnp.exp2(_bcast(scale, x.ndim))
         q = jnp.clip(jnp.round(x.astype(jnp.float32) / step), lo, hi)
+        if spec.packed:
+            # 0-d: pack as one (1,)-code row; decode's `shape or (1,)`
+            # mirrors this (scalars carry one nibble + one pad nibble)
+            return QTensor(pack_int4(q[None] if q.ndim == 0 else q),
+                           jnp.asarray(scale), spec, x.shape)
         return QTensor(q.astype(spec.jnp_storage), jnp.asarray(scale), spec,
                        x.shape)
 
     def decode(self, qt: QTensor, dtype=jnp.float32) -> jax.Array:
-        step = jnp.exp2(_bcast(qt.scale, qt.codes.ndim))
-        return (qt.codes.astype(jnp.float32) * step).astype(dtype)
+        codes = qt.codes
+        if qt.spec.packed:
+            codes = unpack_int4(codes, qt.shape[-1] if qt.shape else 1)
+        step = jnp.exp2(_bcast(qt.scale, codes.ndim))
+        out = codes.astype(jnp.float32) * step
+        return out.reshape(qt.shape).astype(dtype) if qt.spec.packed \
+            else out.astype(dtype)
+
+    def epilogue(self, acc: jax.Array, spec: QuantSpec,
+                 scale_log2: jax.Array) -> jax.Array:
+        """Requantize-on-writeback: the FPGA PE's fused epilogue, owned by
+        the codec registry so `kernels/ttm_pe1.py` and the unfused
+        encode→decode reference path share ONE round/clip/scale body
+        (bit-identity asserted by tests/test_kernels.py). Kernel-safe:
+        plain jnp on an f32 accumulator, no custom_vjp."""
+        scale = jnp.exp2(jnp.asarray(scale_log2).astype(jnp.float32))
+        lo, hi = qrange(spec.bits)
+        return jnp.clip(jnp.round(acc / scale), lo, hi) * scale
 
     def fake_quant(self, x: jax.Array, spec: QuantSpec,
                    scale: jax.Array) -> jax.Array:

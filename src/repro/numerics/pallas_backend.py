@@ -36,7 +36,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .codecs import (Pow2Reference, BlockwiseReference, _p2fq_bwd, _p2fq_fwd,
                      register_codec)
-from .spec import QTensor, QuantSpec, qrange
+from .spec import QTensor, QuantSpec, packed_trailing, qrange
 
 # Count of calls that fell back to the reference codec because the scale
 # array did not fit a kernel layout (incremented at trace time; tests
@@ -219,6 +219,101 @@ def _rowscale_call(kernel, x2d: jax.Array, srow: jax.Array,
     return out[:r, :c]
 
 
+# ---- int4x2 packed (two codes per byte, packed along the trailing dim) ----
+# The kernel bodies call the codec's own pack_int4/unpack_int4 (kernel-safe
+# jnp; blocks are always even-width so the no-pad path runs) — ONE nibble
+# layout owned by codecs.py, same single-implementation rule as the PE1
+# epilogue.
+
+def _p2_enc_packed_kernel(x_ref, step_ref, o_ref, *, bits: int):
+    from .codecs import pack_int4
+    scale = jnp.exp2(step_ref[0].astype(jnp.float32))
+    lo, hi = qrange(bits)
+    q = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / scale), lo, hi)
+    o_ref[...] = pack_int4(q)
+
+
+def _p2_enc_packed_rows_kernel(x_ref, s_ref, o_ref, *, bits: int):
+    from .codecs import pack_int4
+    step = jnp.exp2(s_ref[...].astype(jnp.float32))      # (bm, 1) per-row
+    lo, hi = qrange(bits)
+    q = jnp.clip(jnp.round(x_ref[...].astype(jnp.float32) / step), lo, hi)
+    o_ref[...] = pack_int4(q)
+
+
+def _p2_dec_packed_kernel(q_ref, step_ref, o_ref):
+    from .codecs import unpack_int4
+    scale = jnp.exp2(step_ref[0].astype(jnp.float32))
+    q = unpack_int4(q_ref[...], 2 * q_ref.shape[-1])
+    o_ref[...] = (q.astype(jnp.float32) * scale).astype(o_ref.dtype)
+
+
+def _p2_dec_packed_rows_kernel(q_ref, s_ref, o_ref):
+    from .codecs import unpack_int4
+    step = jnp.exp2(s_ref[...].astype(jnp.float32))
+    q = unpack_int4(q_ref[...], 2 * q_ref.shape[-1])
+    o_ref[...] = (q.astype(jnp.float32) * step).astype(o_ref.dtype)
+
+
+def _rowwise_lastdim(x: jax.Array, scale) -> tuple | None:
+    """View ``x`` as (rows, last) with one scale per row, KEEPING the
+    logical trailing dim intact (the packed codec pairs nibbles along it —
+    `_rowwise`'s full collapse would let pairs straddle row boundaries when
+    the trailing dim is odd). None when the scale extends into the trailing
+    dim (per-element scales: reference fallback)."""
+    scale = jnp.asarray(scale)
+    sh = list(scale.shape)
+    while sh and sh[-1] == 1:
+        sh.pop()
+    if len(sh) > x.ndim - 1:
+        return None
+    lead = x.shape[:-1]
+    if any(s not in (1, d) for s, d in zip(sh, lead)):
+        return None
+    rows = 1
+    for d in lead:
+        rows *= d
+    srow = jnp.broadcast_to(
+        scale.reshape(tuple(sh) + (1,) * (len(lead) - len(sh))),
+        lead).reshape(rows)
+    return x.reshape(rows, x.shape[-1]), srow
+
+
+def _packed_call(kernel, x2d: jax.Array, srow_or_step, out_shape_cols: str,
+                 rowwise: bool, out_dtype) -> jax.Array:
+    """Grid-tiled packed pass. ``out_shape_cols``: "half" for encode
+    ((bm, 2*bc) in -> (bm, bc) out), "double" for decode ((bm, bc) in ->
+    (bm, 2*bc) out). Pads internally, slices back."""
+    r, c = x2d.shape
+    half = out_shape_cols == "half"
+    pk = packed_trailing(c) if half else c   # packed (byte) cols
+    bm = _blk(r, 256, 8)
+    bc = _blk(pk, 256, 128)
+    cp = -(-pk // bc) * bc                   # padded packed cols
+    rp = -(-r // bm) * bm
+    in_cols = 2 * cp if half else cp
+    xp = jnp.zeros((rp, in_cols), x2d.dtype).at[:r, :c].set(x2d)
+    in_block = (bm, 2 * bc) if half else (bm, bc)
+    out_block = (bm, bc) if half else (bm, 2 * bc)
+    if rowwise:
+        sp = _pad2d(srow_or_step.astype(jnp.float32).reshape(r, 1), bm, 1)
+        scale_spec = pl.BlockSpec((bm, 1), lambda i, j: (i, 0))
+        scale_arg = sp
+    else:
+        scale_spec = pl.BlockSpec(memory_space=pltpu.SMEM)
+        scale_arg = jnp.asarray(srow_or_step, jnp.float32).reshape(1)
+    out_cols = cp if half else 2 * cp
+    out = pl.pallas_call(
+        kernel,
+        grid=(rp // bm, cp // bc),
+        in_specs=[pl.BlockSpec(in_block, lambda i, j: (i, j)), scale_spec],
+        out_specs=pl.BlockSpec(out_block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rp, out_cols), out_dtype),
+        interpret=_interpret(),
+    )(xp, scale_arg)
+    return out[:r, :pk] if half else out[:r]
+
+
 @functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
 def _p2_fake_quant_pallas(x, scale_log2, bits):
     return _flat_call(functools.partial(_p2_fq_kernel, bits=bits), x,
@@ -241,6 +336,8 @@ class Pow2Pallas(Pow2Reference):
         return jnp.ndim(scale) == 0 or getattr(scale, "size", 2) == 1
 
     def encode(self, x, spec: QuantSpec, scale):
+        if spec.packed:
+            return self._encode_packed(jnp.asarray(x), spec, scale)
         if self._scalar(scale):
             codes = _flat_call(
                 functools.partial(_p2_enc_kernel, bits=spec.bits),
@@ -257,7 +354,46 @@ class Pow2Pallas(Pow2Reference):
         return QTensor(codes.reshape(x.shape), jnp.asarray(scale), spec,
                        x.shape)
 
+    def _encode_packed(self, x, spec: QuantSpec, scale):
+        if x.ndim == 0:                       # scalars: no trailing dim to pack
+            _note_fallback()
+            return super().encode(x, spec, scale)
+        if self._scalar(scale):
+            x2d = x.reshape(-1, x.shape[-1])
+            codes = _packed_call(
+                functools.partial(_p2_enc_packed_kernel, bits=spec.bits),
+                x2d, scale, "half", False, jnp.int8)
+        else:
+            rw = _rowwise_lastdim(x, scale)
+            if rw is None:
+                _note_fallback()
+                return super().encode(x, spec, scale)
+            x2d, srow = rw
+            codes = _packed_call(
+                functools.partial(_p2_enc_packed_rows_kernel, bits=spec.bits),
+                x2d, srow, "half", True, jnp.int8)
+        return QTensor(codes.reshape(x.shape[:-1] + (codes.shape[-1],)),
+                       jnp.asarray(scale), spec, x.shape)
+
+    def _decode_packed(self, qt: QTensor, dtype):
+        last = qt.shape[-1] if qt.shape else 1
+        if self._scalar(qt.scale):
+            q2d = qt.codes.reshape(-1, qt.codes.shape[-1])
+            out = _packed_call(_p2_dec_packed_kernel, q2d, qt.scale,
+                               "double", False, dtype)
+        else:
+            rw = _rowwise_lastdim(qt.codes, qt.scale)
+            if rw is None:
+                _note_fallback()
+                return super().decode(qt, dtype)
+            q2d, srow = rw
+            out = _packed_call(_p2_dec_packed_rows_kernel, q2d, srow,
+                               "double", True, dtype)
+        return out[:, :last].reshape(qt.shape).astype(dtype)
+
     def decode(self, qt: QTensor, dtype=jnp.float32):
+        if qt.spec.packed:
+            return self._decode_packed(qt, dtype)
         if self._scalar(qt.scale):
             return _flat_call(_p2_dec_kernel, qt.codes, qt.scale, dtype)
         rw = _rowwise(qt.codes, qt.scale)

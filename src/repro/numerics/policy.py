@@ -117,6 +117,14 @@ class NumericsPolicy:
         raise KeyError(f"unknown numerics site {site!r}; "
                        f"known: {[n for n, _ in self.sites]}")
 
+    def nbytes(self, site: str, shape: tuple[int, ...]) -> int:
+        """Analytic resident bytes of a ``shape`` tensor at ``site`` under
+        this policy (codes + scale metadata; packed storage counted at two
+        codes per byte). The per-site accounting the train-wire memory
+        harness asserts against (tests/test_train_wire.py)."""
+        from .spec import spec_nbytes
+        return spec_nbytes(self.spec_for(site), tuple(shape))
+
     def with_spec(self, site: str, spec: QuantSpec) -> "NumericsPolicy":
         if site not in [n for n, _ in self.sites]:
             raise KeyError(site)

@@ -34,7 +34,15 @@ import jax.numpy as jnp
 
 KINDS = ("pow2", "blockwise")
 SCALE_POLICIES = ("fixed", "managed", "per_tensor_max")
-STORAGE_DTYPES = ("int8", "int16", "int32", "float32")
+# "int4x2" is *packed* int4: two 4-bit codes per int8 byte, packed along the
+# trailing axis (odd trailing dims pad one zero nibble inside the codec) —
+# the TT-factor deploy format (3U-EdgeAI-style int4 export).
+STORAGE_DTYPES = ("int8", "int16", "int32", "float32", "int4x2")
+
+
+def packed_trailing(last: int) -> int:
+    """Packed trailing dim of an int4x2 code array: two codes per byte."""
+    return -(-last // 2)
 
 
 def qrange(bits: int) -> tuple[float, float]:
@@ -59,6 +67,17 @@ class QuantSpec:
             raise ValueError(f"unknown scale_policy {self.scale_policy!r}")
         if self.kind == "blockwise" and self.block <= 0:
             raise ValueError("blockwise spec needs block > 0")
+        if self.storage_dtype not in STORAGE_DTYPES:
+            raise ValueError(f"unknown storage_dtype {self.storage_dtype!r}; "
+                             f"one of {STORAGE_DTYPES}")
+        if self.packed and (self.kind != "pow2" or self.bits > 4):
+            raise ValueError("int4x2 packed storage holds one nibble per "
+                             "code: pow2 kind with bits <= 4 only")
+
+    @property
+    def packed(self) -> bool:
+        """Two codes per stored byte (``storage_dtype="int4x2"``)."""
+        return self.storage_dtype == "int4x2"
 
     @property
     def qmin(self) -> float:
@@ -73,6 +92,9 @@ class QuantSpec:
 
     @property
     def jnp_storage(self):
+        # packed int4 codes are physically int8 bytes (two nibbles each)
+        if self.packed:
+            return jnp.dtype("int8")
         return jnp.dtype(self.storage_dtype)
 
     def to_json_dict(self) -> dict:
@@ -92,7 +114,9 @@ class QTensor:
     """A quantized tensor: integer ``codes`` + ``scale`` metadata.
 
     - pow2: ``codes`` has the logical shape, ``scale`` is the (broadcastable)
-      ``scale_log2`` array/scalar; value = codes * 2^scale.
+      ``scale_log2`` array/scalar; value = codes * 2^scale. With packed
+      ``int4x2`` storage ``codes`` is ``shape[:-1] + (ceil(last/2),)`` int8
+      bytes, two nibbles each (odd trailing dims carry one zero pad nibble).
     - blockwise: ``codes`` is ``shape[:-1] + (nb*block,)`` (last axis padded
       to a block multiple), ``scale`` is ``shape[:-1] + (nb,)`` f32;
       value = codes * scale per block, sliced back to ``shape``.
@@ -147,8 +171,12 @@ def spec_nbytes(spec: QuantSpec, shape: tuple[int, ...]) -> int:
     (without materializing): codes + scale metadata."""
     import math
     n = math.prod(shape) if shape else 1
-    itemsize = jnp.dtype(spec.storage_dtype).itemsize
+    itemsize = spec.jnp_storage.itemsize
     if spec.kind == "pow2":
+        if spec.packed:
+            last = shape[-1] if shape else 1
+            lead = n // max(last, 1)
+            return lead * packed_trailing(last) * itemsize + 4
         return n * itemsize + 4
     last = shape[-1] if shape else 1
     b = min(spec.block, max(1, last))

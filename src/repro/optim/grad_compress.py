@@ -12,11 +12,25 @@ each gradient leaf is flattened and round-tripped through the blockwise
 int8 codec (block 1024 — coarser than the optimizer-moment block because
 the wire format amortizes one f32 scale per 1 KiB payload).
 
+Two entry points:
+
+- ``compress_decompress``: the single-program path — quantize-dequantize
+  each leaf locally; XLA's automatic all-reduce then moves the (already
+  quantized-valued) tensors in f32. Values are int8-representable; bytes
+  are not.
+- ``psum_int8`` / ``psum_int8_tree``: the explicit shard_map collective
+  that puts the int8 CODES themselves on the wire. Per block: the local
+  absmax scale is shared across devices (``lax.pmax`` — f32, 1/block of
+  the payload), every device encodes onto the shared grid, the int8 codes
+  cross the wire (``lax.all_gather``), and the sum runs in a widened int32
+  accumulator before one decode back onto the grid. The error-feedback
+  residual stays device-local (each device's own quantization error), so
+  the scheme remains unbiased over time exactly as in the local path.
+
 Usage (inside the jitted train step, before the optimizer):
     grads_c, residual = compress_decompress(grads, residual)
-XLA then all-reduces the (already quantized-valued) tensors; on real
-multi-host meshes the int8 wire format is achieved by casting the
-quantized values to int8 for the psum under shard_map (``psum_int8``).
+or, under ``sharding.compat_shard_map`` over the plan's dp axes:
+    grads_sum, residual = psum_int8_tree(grads, residual, plan.dp_axis())
 """
 from __future__ import annotations
 
@@ -24,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from ..numerics import QuantSpec, roundtrip
+from ..numerics.codecs import blockwise_geometry
 
 WIRE_SPEC = QuantSpec("blockwise", 8, 1024, "int8", "per_tensor_max")
 BLOCK = WIRE_SPEC.block
@@ -48,4 +63,62 @@ def compress_decompress(grads, residual, spec: QuantSpec = WIRE_SPEC):
         deq = roundtrip(corrected.reshape(-1), spec).reshape(g.shape)
         out.append(deq.astype(g.dtype))
         new_res.append(corrected - deq)
+    return jax.tree_util.tree_unflatten(treedef, out), tuple(new_res)
+
+
+def psum_int8(g: jax.Array, residual: jax.Array | None, axis_name,
+              spec: QuantSpec = WIRE_SPEC):
+    """int8-wire all-reduce of one gradient leaf. MUST run inside shard_map
+    (``axis_name`` is the mesh axis of the data-parallel replicas).
+
+    Returns ``(summed, new_residual)``: the cross-device SUM of the
+    quantized gradients (divide by the dp size for the mean) and the
+    device-local error-feedback residual. The only payload-sized tensor
+    that crosses a collective is int8 (asserted by
+    tests/test_distributed.py against the jaxpr).
+    """
+    shape, dtype = g.shape, g.dtype
+    corrected = g.astype(jnp.float32) + \
+        (residual if residual is not None else 0.0)
+    flat = corrected.reshape(-1)
+    b, nb, pad = blockwise_geometry(spec, flat.shape[0])
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(nb, b)
+    qmax = spec.qmax
+    # shared per-block grid: pmax of the local absmax scales, so codes from
+    # different devices are integers on ONE grid and sum exactly
+    sc = jnp.max(jnp.abs(blocks), axis=-1) / qmax
+    sc = jnp.maximum(jax.lax.pmax(sc, axis_name), 1e-20)
+    codes = jnp.clip(jnp.round(blocks / sc[:, None]), -qmax, qmax)
+    wire = codes.astype(spec.jnp_storage)              # THE wire tensor
+    gathered = jax.lax.all_gather(wire, axis_name)     # (ndev, nb, b) int8
+    total = jnp.sum(gathered.astype(jnp.int32), axis=0)  # widened accumulator
+    n = flat.shape[0] - pad
+    summed = (total.astype(jnp.float32) * sc[:, None]).reshape(-1)[:n]
+    deq_local = (codes * sc[:, None]).reshape(-1)[:n]
+    new_residual = corrected - deq_local.reshape(shape)
+    return summed.reshape(shape).astype(dtype), new_residual
+
+
+def psum_int8_tree(grads, residual, axis_name, spec: QuantSpec = WIRE_SPEC):
+    """Tree version of ``psum_int8`` with ``compress_decompress``'s residual
+    conventions (tuple aligned with the flattened leaves; None residual
+    initializes zeros; non-float leaves pass through untouched)."""
+    leaves, treedef = jax.tree_util.tree_flatten(grads)
+    if residual is None:
+        res_leaves = [jnp.zeros_like(g, jnp.float32)
+                      if jnp.issubdtype(g.dtype, jnp.floating) else None
+                      for g in leaves]
+    else:
+        res_leaves = list(residual)
+    out, new_res = [], []
+    for g, r in zip(leaves, res_leaves):
+        if r is None or not jnp.issubdtype(g.dtype, jnp.floating):
+            out.append(g)
+            new_res.append(r)
+            continue
+        s, nr = psum_int8(g, r, axis_name, spec)
+        out.append(s)
+        new_res.append(nr)
     return jax.tree_util.tree_unflatten(treedef, out), tuple(new_res)

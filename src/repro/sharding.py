@@ -23,6 +23,19 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 
+def compat_shard_map(f, mesh, in_specs, out_specs):
+    """Version-compat shard_map: ``jax.shard_map`` (new API, check_vma)
+    with fallback to ``jax.experimental.shard_map`` (check_rep). One shim
+    for every explicit-collective site (MoE expert dispatch, the int8
+    gradient wire)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(f, mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def _div(n: int, mesh: Mesh | None, axis) -> bool:
     if mesh is None or axis is None:
         return False
@@ -41,6 +54,20 @@ class ShardPlan:
     seq_sharded_cache: bool = False       # long-context decode SP
 
     # ---- helpers -----------------------------------------------------
+    def dp_axis(self) -> str | tuple[str, ...]:
+        """Mesh axis name(s) for data-parallel collectives (``lax.psum`` /
+        ``all_gather`` inside shard_map — e.g. the int8 gradient wire,
+        ``optim.grad_compress.psum_int8``)."""
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def dp_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        n = 1
+        for ax in self.dp_axes:
+            n *= self.mesh.shape[ax]
+        return n
+
     def ns(self, spec: P) -> NamedSharding | None:
         if self.mesh is None:
             return None

@@ -5,6 +5,7 @@ initializes) and asserts that the sharded computation matches the
 single-device reference: TP, CP, EP (shard_map MoE), and the sharded train
 step.
 """
+import os
 import subprocess
 import sys
 
@@ -54,6 +55,93 @@ elif CASE == "ep":
                                rtol=2e-3, atol=2e-3)
     print("OK ep")
 
+elif CASE == "wire":
+    # psum_int8 under a 2-device dp mesh: (a) the reduced gradient matches
+    # the single-device grad_compress semantics (shared pmax block scale,
+    # codes summed in a widened int32 accumulator, decoded once), (b) the
+    # device-local error-feedback residual is preserved, (c) the ONLY
+    # payload-sized collective operand is int8 — the dp_wire bytes really
+    # are int8 on the wire.
+    from jax.sharding import Mesh
+    from repro.optim.grad_compress import WIRE_SPEC, psum_int8_tree
+    from repro.numerics.codecs import blockwise_geometry
+    from repro.sharding import ShardPlan, compat_shard_map
+
+    plan = ShardPlan(mesh=None, dp_axes=("data",))
+    assert plan.dp_axis() == "data" and ShardPlan(
+        mesh=None, dp_axes=("pod", "data")).dp_axis() == ("pod", "data")
+
+    mesh2 = Mesh(np.array(jax.devices()[:2]), ("data",))
+    ndev = 2
+    shapes = [(1500,), (7, 129), ()]
+    key = jax.random.PRNGKey(0)
+    gs = {f"g{i}": jax.random.normal(jax.random.fold_in(key, i),
+                                     (ndev,) + s) * (i + 1)
+          for i, s in enumerate(shapes)}
+    rs = {f"g{i}": 0.01 * jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                            (ndev,) + s)
+          for i, s in enumerate(shapes)}
+
+    def local(g, r):
+        g1 = jax.tree.map(lambda a: a[0], g)
+        r1 = jax.tree.map(lambda a: a[0], r)
+        out, nr = psum_int8_tree(g1, tuple(jax.tree_util.tree_leaves(r1)),
+                                 "data", WIRE_SPEC)
+        nr_tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(g1), list(nr))
+        return out, jax.tree.map(lambda a: a[None], nr_tree)
+
+    f = compat_shard_map(local, mesh2, in_specs=(P("data"), P("data")),
+                         out_specs=(P(), P("data")))
+    out, nres = jax.jit(f)(gs, rs)
+
+    # single-device oracle: the SAME per-shard quantize + widened code sum,
+    # written as plain jnp over the stacked per-device axis — no mesh, no
+    # collectives. The shard_map path must match it BITWISE: the int8 wire
+    # changes where the bytes travel, not the values.
+    @jax.jit
+    def ref_leaf(gd, rd):                   # (ndev, *s) each
+        flat = (gd.astype(jnp.float32) + rd).reshape(ndev, -1)
+        n = flat.shape[1]
+        b, nb, pad = blockwise_geometry(WIRE_SPEC, n)
+        blocks = jnp.pad(flat, ((0, 0), (0, pad))).reshape(ndev, nb, b)
+        sc = jnp.max(jnp.abs(blocks), axis=-1) / WIRE_SPEC.qmax
+        sc = jnp.maximum(jnp.max(sc, axis=0), 1e-20)    # shared (pmax) scale
+        codes = jnp.clip(jnp.round(blocks / sc[None, :, None]), -127, 127)
+        total = jnp.sum(codes.astype(jnp.int32), axis=0)  # widened accum
+        summed = (total.astype(jnp.float32) * sc[:, None]).reshape(-1)[:n]
+        res = (blocks - codes * sc[None, :, None]).reshape(ndev, -1)[:, :n]
+        return summed.reshape(gd.shape[1:]), res.reshape(gd.shape)
+
+    for name, s in zip(sorted(gs), shapes):
+        ref_sum, ref_res = ref_leaf(gs[name], rs[name])
+        np.testing.assert_array_equal(np.asarray(out[name]),
+                                      np.asarray(ref_sum))
+        np.testing.assert_allclose(np.asarray(nres[name]),
+                                   np.asarray(ref_res), atol=1e-6)
+        # and the sum is the real gradient sum within quantization error
+        exact = np.asarray(gs[name] + rs[name]).sum(0)
+        tol = 2 * ndev * max(np.abs(np.asarray(gs[name])).max() / 127, 1e-6)
+        np.testing.assert_allclose(np.asarray(out[name]), exact, atol=tol)
+
+    # wire dtype: walk the jaxpr (incl. the shard_map body) — every
+    # all_gather operand must be int8
+    jaxpr = jax.make_jaxpr(f)(gs, rs)
+
+    def walk(jx, found):
+        for eqn in jx.eqns:
+            if "all_gather" in eqn.primitive.name:
+                found.append(eqn.invars[0].aval.dtype)
+            for v in eqn.params.values():
+                inner = getattr(v, "jaxpr", v)
+                if hasattr(inner, "eqns"):
+                    walk(inner, found)
+        return found
+
+    gathers = walk(jaxpr.jaxpr, [])
+    assert gathers and all(d == jnp.dtype(jnp.int8) for d in gathers), gathers
+    print("OK wire", len(gathers))
+
 elif CASE == "train":
     cfg = ModelConfig(name="t", num_layers=2, d_model=64, num_heads=4,
                       num_kv_heads=2, d_ff=128, vocab_size=96,
@@ -81,13 +169,17 @@ elif CASE == "train":
 """
 
 
-@pytest.mark.parametrize("case", ["tp", "cp", "ep", "train"])
+@pytest.mark.parametrize("case", ["tp", "cp", "ep", "train", "wire"])
 def test_sharded_equivalence(case):
     r = subprocess.run(
         [sys.executable, "-c", SCRIPT % case],
         capture_output=True, text=True, timeout=600,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
-             "HOME": "/root"},
+             "HOME": "/root",
+             # pin the platform: the forced 8-device host mesh is a CPU
+             # construct, and without this a libtpu install spins on TPU
+             # metadata discovery inside the cleared env
+             "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")},
         cwd="/root/repo")
     assert r.returncode == 0, f"stdout={r.stdout}\nstderr={r.stderr[-3000:]}"
     assert f"OK" in r.stdout

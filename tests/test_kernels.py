@@ -46,6 +46,69 @@ def test_pe1_fused_requant(shape):
         ref.pe1_quant_ref(z, g, step, 8), rtol=1e-5, atol=1e-5)
 
 
+# PE1 fused-epilogue differential harness (mirrors test_paged_attention's
+# oracle pattern): the in-kernel requant writeback must be BIT-identical to
+# the codec-reference path — same tile-grid accumulation (the unfused
+# kernel), epilogue applied through the registry's encode→decode.
+# (256, 16, 256) exercises a multi-step K grid (b*c = 4096 -> 8 K-tiles).
+PE1_EPILOGUE_SHAPES = [(37, 5, 48), (128, 1, 16), (256, 16, 256),
+                       (8, 7, 130)]
+
+
+@pytest.mark.parametrize("shape", PE1_EPILOGUE_SHAPES)
+@pytest.mark.parametrize("bits", [4, 8])
+def test_pe1_epilogue_bit_identical_to_codec(shape, bits):
+    from repro import numerics as N
+    a, b, c = shape
+    d = max(8, a // 2)
+    z = jax.random.normal(jax.random.PRNGKey(0), (a, b, c))
+    g = jax.random.normal(jax.random.PRNGKey(1), (b, d, c))
+    step = jnp.asarray(-3.0)
+    fused = ops.pe1(z, g, step_log2=step, bits=bits, impl="pallas")
+    # codec-reference path: identical accumulation (the unfused kernel over
+    # the same tile grid), then the registry codec's encode->decode
+    acc = ops.pe1(z, g, impl="pallas")
+    spec = N.QuantSpec("pow2", bits, 0, "int8" if bits <= 8 else "int16")
+    unfused = N.decode(N.encode(acc, spec, step), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_pe1_jnp_impl_matches_reference_oracle(bits):
+    """The "jnp" impl (registry-composed einsum + epilogue) equals the
+    hand-written oracle — and the kernel stays allclose to it (float
+    reassociation only)."""
+    a, b, c = 37, 5, 48
+    d = 16
+    z = jax.random.normal(jax.random.PRNGKey(2), (a, b, c))
+    g = jax.random.normal(jax.random.PRNGKey(3), (b, d, c))
+    step = jnp.asarray(-4.0)
+    jnp_out = ops.pe1(z, g, step_log2=step, bits=bits, impl="jnp")
+    np.testing.assert_array_equal(
+        np.asarray(jnp_out), np.asarray(ref.pe1_quant_ref(z, g, step, bits)))
+    np.testing.assert_allclose(
+        np.asarray(ops.pe1(z, g, step_log2=step, bits=bits, impl="pallas")),
+        np.asarray(jnp_out), rtol=1e-4, atol=1e-4)
+
+
+def test_pe1_epilogue_owned_by_registry():
+    """The kernel's requant body IS the registry codec's epilogue — one
+    implementation, checked by identity of the functions' outputs on the
+    raw accumulator (guards against the epilogue drifting back to a
+    hand-rolled copy)."""
+    from repro import numerics as N
+    from repro.numerics.codecs import get_codec
+    acc = jax.random.normal(jax.random.PRNGKey(4), (64, 64)) * 7
+    spec = N.QuantSpec("pow2", 8)
+    step = jnp.asarray(-2.0)
+    epi = get_codec(spec, "reference").epilogue(acc, spec, step)
+    np.testing.assert_array_equal(
+        np.asarray(epi),
+        np.asarray(N.decode(N.encode(acc, spec, step), jnp.float32)))
+    np.testing.assert_array_equal(np.asarray(epi),
+                                  np.asarray(ref.quantize_ref(acc, step, 8)))
+
+
 @pytest.mark.parametrize("shape", PE2_SHAPES)
 @pytest.mark.parametrize("dt", DTYPES)
 def test_pe2_sweep(shape, dt):

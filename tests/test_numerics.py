@@ -93,6 +93,110 @@ def test_pow2_multiscale_bit_identity_no_fallback(xshape, sshape):
         "KV-pool-shaped scales must run the vectorized kernel natively"
 
 
+# int4x2 packed storage: two codes per byte along the trailing dim (the
+# tt_factor deploy format). Odd trailing dims carry one zero pad nibble.
+INT4X2_CASES = [
+    ((7,), None),                        # 1-D, odd
+    ((6,), None),                        # 1-D, even
+    ((5, 9), None),                      # odd trailing
+    ((4, 130), (4, 1)),                  # per-row scales
+    ((3, 4, 11), (3, 1)),                # per-layer scales, odd trailing
+    ((2, 3, 6), (2, 3)),                 # per-(layer, slot) grid
+]
+
+
+@pytest.mark.parametrize("shape,sshape", INT4X2_CASES)
+def test_int4x2_roundtrip_bit_identity_no_fallback(shape, sshape):
+    """Packed int4 pack/unpack round-trip: reference and Pallas backends
+    bit-identical (codes AND decode), packed codes are exactly
+    ceil(last/2) bytes per row, values identical to the unpacked int8
+    4-bit spec, and no call drops to the reference fallback."""
+    from repro.numerics import pallas_backend as PB
+    spec = N.QuantSpec("pow2", 4, 0, "int4x2", "fixed")
+    x = jax.random.normal(jax.random.PRNGKey(11), shape) * 0.5
+    sc = jnp.asarray(-3.0) if sshape is None else jnp.asarray(
+        np.random.RandomState(3).randint(-5, 0, sshape), jnp.float32)
+    PB.reset_fallback_count()
+    qr = N.encode(x, spec, sc, backend="reference")
+    qp = N.encode(x, spec, sc, backend="pallas")
+    assert qr.codes.dtype == jnp.int8
+    assert qr.codes.shape == shape[:-1] + (-(-shape[-1] // 2),)
+    np.testing.assert_array_equal(np.asarray(qr.codes), np.asarray(qp.codes))
+    dr = N.decode(qr)
+    np.testing.assert_array_equal(np.asarray(dr),
+                                  np.asarray(N.decode(qp, backend="pallas")))
+    assert PB.fallback_count() == 0, \
+        "packed codec must run the Pallas kernels natively"
+    # cross-spec: same VALUES as the unpacked int8-stored 4-bit spec
+    unpacked = N.QuantSpec("pow2", 4, 0, "int8", "fixed")
+    np.testing.assert_array_equal(
+        np.asarray(dr), np.asarray(N.decode(N.encode(x, unpacked, sc))))
+    # nbytes halves (modulo the scale metadata)
+    assert qr.nbytes() <= N.encode(x, unpacked, sc).nbytes() // 2 + 4 + \
+        np.asarray(sc).nbytes
+
+
+def test_int4x2_pack_unpack_exact():
+    """pack/unpack primitives: exact inverse over the full nibble range,
+    pad nibble lands in the high half of the last byte."""
+    from repro.numerics.codecs import pack_int4, unpack_int4
+    q = jnp.asarray([[-8, -1, 0, 7, 3], [1, 2, -3, 4, -5]], jnp.int32)
+    p = pack_int4(q)
+    assert p.shape == (2, 3) and p.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(unpack_int4(p, 5)),
+                                  np.asarray(q))
+    # odd trailing dim: high nibble of the last byte is the zero pad
+    assert (np.asarray(p)[:, -1].astype(np.int32) & 0xF0 == 0).all()
+
+
+def test_int4x2_spec_validation():
+    with pytest.raises(ValueError):
+        N.QuantSpec("pow2", 8, 0, "int4x2")          # nibble can't hold 8 bits
+    with pytest.raises(ValueError):
+        N.QuantSpec("blockwise", 4, 64, "int4x2")    # pow2 only
+    spec = N.QuantSpec("pow2", 4, 0, "int4x2")
+    assert spec.packed and spec.jnp_storage == jnp.dtype(jnp.int8)
+    assert N.QuantSpec.from_json_dict(spec.to_json_dict()) == spec
+    # analytic accounting counts two codes per byte
+    assert N.spec_nbytes(spec, (4, 9)) == 4 * 5 + 4
+    # 0-d tensors pack as one nibble + one pad nibble on both backends
+    for backend in N.BACKENDS:
+        qt = N.encode(jnp.asarray(0.5), spec, jnp.asarray(-3.0),
+                      backend=backend)
+        assert qt.codes.shape == (1,) and qt.shape == ()
+        assert float(N.decode(qt)) == 0.5      # 4 * 2^-3: exact on the grid
+
+
+def test_int4x2_hypothesis_roundtrip():
+    """Property form of the round-trip over random shapes (odd/even
+    trailing dims) and scale layouts."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+    from repro.numerics import pallas_backend as PB
+    spec = N.QuantSpec("pow2", 4, 0, "int4x2", "fixed")
+
+    @settings(max_examples=25, deadline=None)
+    @given(lead=st.integers(1, 5), last=st.integers(1, 17),
+           per_row=st.booleans(), seed=st.integers(0, 2 ** 16))
+    def check(lead, last, per_row, seed):
+        x = jax.random.normal(jax.random.PRNGKey(seed), (lead, last)) * 0.5
+        sc = jnp.asarray(
+            np.random.RandomState(seed).randint(-5, 0, (lead, 1)),
+            jnp.float32) if per_row else jnp.asarray(-3.0)
+        PB.reset_fallback_count()
+        qr = N.encode(x, spec, sc, backend="reference")
+        qp = N.encode(x, spec, sc, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(qr.codes),
+                                      np.asarray(qp.codes))
+        np.testing.assert_array_equal(
+            np.asarray(N.decode(qr)),
+            np.asarray(N.decode(qp, backend="pallas")))
+        assert qr.codes.shape == (lead, -(-last // 2))
+        assert PB.fallback_count() == 0
+
+    check()
+
+
 def test_pow2_fake_quant_shares_leading_dim_convention():
     """One scale convention across all three codec ops: a per-layer (L, 1)
     scale means the same thing to fake_quant as to encode/decode (leading-

@@ -1,0 +1,229 @@
+"""Train-step numerics harness: the paper's memory-reduction table as an
+executable test.
+
+One full low-precision train step runs on (a) the FMNIST TT config (the
+paper's own experiment) and (b) a small zoo LM through the unified step
+factory, and every byte class of the training wire is accounted per
+NumericsPolicy site:
+
+- ``activation``        8-bit pow2 residual-stream edges (lm_forward scales)
+- ``grad_edge``         16-bit pow2 weight-gradient rounding
+- ``optimizer_moment``  blockwise-int8 Adam m/v QTensors
+- ``dp_wire``           blockwise-int8 gradient wire (+ error feedback)
+- ``tt_factor``         packed int4x2 deploy export (two codes per byte)
+
+The acceptance claim: measured training memory (activations + tt_factor +
+moments + wire) on the FMNIST TT config is >= 8x smaller than the fp32
+dense baseline (the paper's Table-1 comparison; it reports 292x counting
+parameters alone).
+"""
+import importlib.util
+import os
+import pathlib
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import numerics as N
+from repro.ckpt import export_tt_deploy, load_tt_deploy
+from repro.configs.base import (ModelConfig, QuantConfig, TTConfig,
+                                TrainConfig)
+
+# the bench module is the single owner of the FMNIST step construction and
+# the per-site byte accounting — the executable test asserts the SAME
+# numbers the BENCH_train_wire.json artifact reports (no drift possible)
+_BENCH_PATH = (pathlib.Path(__file__).resolve().parent.parent
+               / "benchmarks" / "train_wire.py")
+_spec = importlib.util.spec_from_file_location("train_wire_bench",
+                                               _BENCH_PATH)
+TW = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(TW)
+
+BATCH = 64
+
+
+def test_fmnist_low_precision_step_trains():
+    r = TW.fmnist_low_precision_step(BATCH)
+    assert np.isfinite(float(r["loss"]))
+    moved = [np.abs(np.asarray(r["new_params"]["l1"][f"core_{n}"])
+                    - np.asarray(r["params"]["l1"][f"core_{n}"])).max()
+             for n in range(r["d"].spec1.d)]
+    assert max(moved) > 0
+    # the int8 optimizer state really is QTensors after the step
+    qts = [m for m in r["opt"].m if m is not None]
+    assert qts and all(isinstance(m, N.QTensor) for m in qts)
+
+
+def test_fmnist_train_wire_memory_table():
+    """The executable Table-1: per-site measured bytes vs the fp32 dense
+    baseline; >= 8x total reduction is the acceptance bar (measured is far
+    higher — the paper reports 292x on parameters alone)."""
+    r = TW.fmnist_low_precision_step(BATCH)
+    path = os.path.join(tempfile.mkdtemp(), "deploy.ckpt")
+    sites, baseline, _ = TW.fmnist_site_table(r, deploy_path=path)
+
+    low = sum(sites.values())
+    base = sum(baseline.values())
+    reduction = base / low
+    print(f"\ntrain-wire bytes: {sites} -> {low} "
+          f"(fp32 dense baseline {base}, reduction {reduction:.1f}x)")
+    assert reduction >= 8.0, (sites, baseline, reduction)
+
+    # each site individually beats its fp32 counterpart by ~the bit ratio
+    assert sites["activation"] * 3.5 < baseline["activation"]
+    assert sites["tt_factor"] * 7 < baseline["tt_factor"]
+    assert sites["dp_wire"] * 3.5 < baseline["dp_wire"]
+
+    # deploy export round-trips onto the 4-bit grid
+    loaded, _ = load_tt_deploy(path)
+    new_params = r["new_params"]
+    steps = new_params["l1"]["wscale_log2"]
+    ref = N.decode(N.encode(new_params["l1"]["core_0"],
+                            N.QuantSpec("pow2", 4),
+                            steps[0].astype(jnp.float32)))
+    np.testing.assert_array_equal(np.asarray(loaded["l1"]["core_0"]),
+                                  np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# zoo LM: the unified step factory with the policy-owned activation site
+# ---------------------------------------------------------------------------
+
+def _tiny_tt_lm():
+    cfg = ModelConfig(name="t", num_layers=2, d_model=32, num_heads=2,
+                      num_kv_heads=2, d_ff=64, vocab_size=64,
+                      remat="none", dtype="float32",
+                      tt=TTConfig(enable=True, d=3, max_rank=4,
+                                  min_elements=1024),
+                      quant=QuantConfig(enable=True))
+    from repro.models import build_lm, init_lm
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    return cfg, lm, params
+
+
+def _lm_batch(b=2, s=16, vocab=64):
+    return {"tokens": jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                                         vocab),
+            "labels": jax.random.randint(jax.random.PRNGKey(2), (b, s), 0,
+                                         vocab)}
+
+
+def test_lm_train_step_runs_activation_site():
+    """The zoo-LM half of the ROADMAP gap: quant edges live in lm_forward,
+    scale state carried in TrainState.scales and advanced by the step."""
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_tt_lm()
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, grad_compress=True,
+                       opt_state_dtype="int8")
+    state = init_train_state(params, tcfg, policy=cfg.quant.policy())
+    assert set(state.scales) == {"activation", "grad_edge"}
+    step = jax.jit(make_train_step(lm, ShardPlan(mesh=None), tcfg))
+    batch = _lm_batch()
+    s0_mean = float(state.scales["activation"].mean_abs)
+    for _ in range(3):
+        state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # the §3.3 manager observed the forward activations and moved its stat
+    assert float(state.scales["activation"].mean_abs) != s0_mean
+    # error feedback is live alongside
+    assert any(np.abs(np.asarray(r)).max() > 0
+               for r in state.residual if r is not None)
+
+
+def test_lm_activation_edges_quantize_forward():
+    """With scales, the residual stream is actually fake-quantized (logits
+    differ from the unquantized forward and coarsen with the scale), and
+    the obs statistic is returned for the manager."""
+    from repro.models.lm import lm_forward
+    from repro.numerics.policy import ScaleState
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_tt_lm()
+    plan = ShardPlan(mesh=None)
+    batch = _lm_batch()
+    scales = cfg.quant.policy().init_scales()
+    lq, _, _, obs = lm_forward(params, lm, plan, tokens=batch["tokens"],
+                               scales=scales)
+    lf, _, _ = lm_forward(params, lm, plan, tokens=batch["tokens"])
+    assert np.abs(np.asarray(lq) - np.asarray(lf)).max() > 0
+    assert float(obs["activation"][0]) > 0
+    # an absurdly coarse activation scale crushes the stream to zero —
+    # proof the edge sits ON the forward values, not beside them
+    dead = dict(scales)
+    dead["activation"] = ScaleState(jnp.asarray(30, jnp.int32),
+                                    scales["activation"].mean_abs)
+    ld, _, _, _ = lm_forward(params, lm, plan, tokens=batch["tokens"],
+                             scales=dead)
+    assert np.abs(np.asarray(ld)).max() < np.abs(np.asarray(lq)).max()
+
+
+def test_lm_grad_accum_carries_activation_scales():
+    """n_micro=1 grad-accum matches the plain step INCLUDING the new scale
+    updates (extends the PR-2 residual-semantics contract)."""
+    from repro.launch.steps import (init_train_state,
+                                    make_grad_accum_train_step,
+                                    make_train_step)
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_tt_lm()
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, grad_compress=True)
+    plan = ShardPlan(mesh=None)
+    batch = _lm_batch()
+    s0 = init_train_state(params, tcfg, policy=cfg.quant.policy())
+    s1, m1 = jax.jit(make_train_step(lm, plan, tcfg))(s0, batch)
+    s2, m2 = jax.jit(make_grad_accum_train_step(lm, plan, tcfg, 1))(
+        s0, jax.tree.map(lambda a: a[None], batch))
+    for a, b in zip(jax.tree_util.tree_leaves(s1.scales),
+                    jax.tree_util.tree_leaves(s2.scales)):
+        # rtol 1e-4: the observed-|activation| stat is reassociated
+        # differently by XLA across the two compiled programs
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(s1.params),
+                    jax.tree_util.tree_leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_lm_train_wire_byte_table():
+    """Per-site accounting for the zoo LM config: every byte class of one
+    train step is policy-governed and smaller than its fp32 shadow."""
+    from repro.launch.steps import init_train_state, make_train_step
+    from repro.sharding import ShardPlan
+    cfg, lm, params = _tiny_tt_lm()
+    policy = cfg.quant.policy()
+    tcfg = TrainConfig(total_steps=5, warmup_steps=1, grad_compress=True,
+                       opt_state_dtype="int8")
+    state = init_train_state(params, tcfg, policy=policy)
+    step = jax.jit(make_train_step(lm, ShardPlan(mesh=None), tcfg))
+    state, _ = step(state, _lm_batch())
+
+    b, s, dm = 2, 16, cfg.d_model
+    n_edges = cfg.num_layers + 1            # embed + per-sublayer edges
+    table = {}
+    table["activation"] = n_edges * policy.nbytes("activation", (b, s, dm))
+    fp32_act = n_edges * b * s * dm * 4
+    table["optimizer_moment"] = sum(
+        m.nbytes() for m in (*state.opt.m, *state.opt.v)
+        if isinstance(m, N.QTensor))
+    float_param_bytes = sum(
+        l.nbytes for l in jax.tree_util.tree_leaves(state.params)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating))
+    table["dp_wire"] = sum(
+        policy.nbytes("dp_wire", (int(l.size),))
+        for l in jax.tree_util.tree_leaves(state.params)
+        if hasattr(l, "dtype") and jnp.issubdtype(l.dtype, jnp.floating))
+    path = os.path.join(tempfile.mkdtemp(), "lm_deploy.ckpt")
+    stats = export_tt_deploy(path, state.params, policy=policy)
+    table["tt_factor"] = stats["packed_bytes"]
+
+    assert table["activation"] * 3.5 < fp32_act
+    # tiny TT cores clamp the moment block to the trailing rank (4), so one
+    # f32 scale amortizes over only 4 codes — 2x is the honest bound here
+    # (production-size leaves hit the full 256-block ~3.9x)
+    assert table["optimizer_moment"] * 2 < 2 * float_param_bytes
+    assert table["dp_wire"] * 3.5 < float_param_bytes
+    assert table["tt_factor"] * 7 < stats["fp32_bytes"]
+    print(f"\nlm train-wire bytes: {table}")
