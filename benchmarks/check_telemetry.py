@@ -1,0 +1,80 @@
+"""CI telemetry-schema assertions (the smoke gate for repro.obs).
+
+Validates the artifacts the ``--trace-out`` bench runs emit: the trace
+JSONL carries the engine event schema, the BENCH documents grow the
+``telemetry`` / ``quant_health`` keys, and every clip fraction is finite
+and < 0.5 at the seed config (a clip fraction near the 0.5 ceiling means
+the pow-2 scale manager is mis-tracking — the §3.3 regression this guards).
+
+    python benchmarks/check_telemetry.py \
+        --serve BENCH_serve_telemetry.json --serve-trace serve_trace.jsonl \
+        --train BENCH_train_wire.json --train-trace train_trace.jsonl
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+
+SERVE_EVENT_KINDS = {"submit", "admit", "prefill", "first_token",
+                     "decode_step", "retire"}
+
+
+def _check_fraction(name: str, f: float) -> None:
+    assert math.isfinite(f) and 0.0 <= f < 0.5, \
+        f"{name}: clip/sat fraction {f!r} out of range"
+
+
+def check_serve(doc_path: str, trace_path: str) -> None:
+    doc = json.load(open(doc_path))
+    tel = doc["telemetry"]
+    assert tel["trace_events"] > 0, tel
+    assert tel["trace_dropped"] == 0, tel
+    assert tel["codec_fallbacks"] == 0, \
+        f"serve sweep took {tel['codec_fallbacks']} reference-codec fallbacks"
+    kinds = {json.loads(line)["kind"] for line in open(trace_path)}
+    missing = SERVE_EVENT_KINDS - kinds
+    assert not missing, f"trace {trace_path} missing event kinds: {missing}"
+    int8 = [c for c in doc["cells"] if c["kv_cache"] == "int8"]
+    assert int8, doc["cells"]
+    for c in int8:
+        kv = c["quant_health"].get("kv_cache")
+        assert kv and kv["total"] > 0, c["quant_health"]
+        _check_fraction(f"serve slots={c['slots']} kv_cache",
+                        kv["clip_fraction"])
+    for c in doc["cells"]:
+        assert c["batch_fill_mean"] > 0, c
+    print(f"[check_telemetry] serve OK: {tel['trace_events']} events, "
+          f"{len(int8)} int8 cells with kv health")
+
+
+def check_train(doc_path: str, trace_path: str) -> None:
+    doc = json.load(open(doc_path))
+    qh = doc["quant_health"]
+    for site in ("grad_edge", "dp_wire"):
+        assert site in qh, qh
+        _check_fraction(f"train {site} clip", qh[site]["clip_fraction"])
+        _check_fraction(f"train {site} sat", qh[site]["sat_fraction"])
+    assert qh["grad_edge"]["total"] > 0, qh
+    steps = [json.loads(line) for line in open(trace_path)]
+    assert steps and all(s["kind"] == "train_step" and s["dur"] > 0
+                         for s in steps), steps[:3]
+    print(f"[check_telemetry] train OK: {len(steps)} train_step events, "
+          f"grad_edge sat {qh['grad_edge']['sat_fraction']:.4f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--serve")
+    ap.add_argument("--serve-trace")
+    ap.add_argument("--train")
+    ap.add_argument("--train-trace")
+    args = ap.parse_args()
+    if args.serve:
+        check_serve(args.serve, args.serve_trace)
+    if args.train:
+        check_train(args.train, args.train_trace)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,14 +39,27 @@ import numpy as np
 
 def bench_cell(lm, params, plan, *, slots: int, quantized: bool,
                requests: int, prompt_len: int, gen_len: int,
-               page_size: int) -> dict:
+               page_size: int, trace=None, health: bool = False) -> dict:
+    """One (slots, kv-mode) engine run. ``trace``: shared
+    ``repro.obs.TraceRecorder`` (cells are delimited by ``bench_cell``
+    marker events); ``health`` switches on the in-engine quant-health
+    aggregates — quantized cells only (the policy would otherwise force
+    the fp32 cell's pool to int8)."""
     from repro.serve import Engine, EngineConfig, PoolConfig
 
     horizon = prompt_len + gen_len
     pcfg = PoolConfig(num_slots=slots, page_size=page_size,
                       pages_per_slot=-(-horizon // page_size) + 1,
                       quantized=quantized)
-    eng = Engine(lm, params, EngineConfig(pool=pcfg), plan)
+    policy = None
+    if health and quantized:
+        from repro.numerics import NumericsPolicy
+        policy = NumericsPolicy(enable=True, health=True)
+    if trace is not None:
+        trace.emit("bench_cell", slots=slots,
+                   kv="int8" if quantized else "fp32")
+    eng = Engine(lm, params, EngineConfig(pool=pcfg, policy=policy), plan,
+                 trace=trace)
     rng = np.random.RandomState(0)
     for _ in range(requests):
         plen = int(rng.randint(max(prompt_len // 2, 1), prompt_len + 1))
@@ -64,16 +77,23 @@ def bench_cell(lm, params, plan, *, slots: int, quantized: bool,
         "tokens_per_s": s["tokens_per_s"],
         "ttft_p50_s": s["ttft_p50_s"],
         "ttft_p95_s": s["ttft_p95_s"],
+        "ttft_queue_p50_s": s["ttft_queue_p50_s"],
+        "ttft_compute_p50_s": s["ttft_compute_p50_s"],
         "latency_p50_s": s["latency_p50_s"],
         "latency_p95_s": s["latency_p95_s"],
+        "batch_fill_mean": s["batch_fill_mean"],
+        "batch_fill_frac": s["batch_fill_frac"],
+        "free_pages_min": s["free_pages_min"],
         "cache_bytes": s["cache_bytes"],
         "cache_reduction_vs_fp32": s["cache_reduction"],
         "preemptions": s["preemptions"],
+        "quant_health": s["quant_health"],
     }
 
 
 def run_sweep(arch: str, slots_list: list[int], requests: int,
-              prompt_len: int, gen_len: int, page_size: int) -> dict:
+              prompt_len: int, gen_len: int, page_size: int,
+              trace=None, health: bool = False) -> dict:
     import repro.configs as C
     from repro.models import build_lm, init_lm
     from repro.sharding import ShardPlan
@@ -88,7 +108,7 @@ def run_sweep(arch: str, slots_list: list[int], requests: int,
             cells.append(bench_cell(
                 lm, params, plan, slots=slots, quantized=quantized,
                 requests=requests, prompt_len=prompt_len, gen_len=gen_len,
-                page_size=page_size))
+                page_size=page_size, trace=trace, health=health))
             print(f"  slots={slots} kv={cells[-1]['kv_cache']}: "
                   f"{cells[-1]['tokens_per_s']:.1f} tok/s, "
                   f"{cells[-1]['cache_bytes']} cache bytes",
@@ -121,16 +141,19 @@ def _decode_timer(lm, params, plan, *, fused: bool, ctx: int, slots: int,
     args = (jnp.asarray(sched.page_table), jnp.asarray(sched.lens_vector()),
             jnp.asarray(sched.active_mask()),
             jnp.asarray(sched.tokens_vector()))
-    state = {"pool": eng.pool}
+    state = {"pool": eng.pool, "spool": eng.spool}
+
+    def one():
+        # pool + state pool are donated (argnums 1,2): rebind both each call
+        logits, state["pool"], state["spool"] = eng._decode_jit(
+            eng.params, state["pool"], state["spool"], *args)
+        return logits
 
     def timed(steps: int) -> float:
-        logits, state["pool"] = eng._decode_jit(eng.params, state["pool"],
-                                                *args)
-        jax.block_until_ready(logits)   # warm
+        jax.block_until_ready(one())    # warm
         t0 = time.time()
         for _ in range(steps):
-            logits, state["pool"] = eng._decode_jit(eng.params,
-                                                    state["pool"], *args)
+            logits = one()
         jax.block_until_ready(logits)
         return time.time() - t0
 
@@ -360,8 +383,22 @@ def main() -> None:
                     help="fused sweep on an fp32 pool instead of int8")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny fused sweep for CI (ctx 64, few steps)")
+    ap.add_argument("--trace-out", default="",
+                    help="default sweep only: record per-step engine events "
+                         "(admit/prefill/decode/preempt/retire/page "
+                         "alloc-free) to this JSONL and switch on the "
+                         "quant-health aggregates for int8 cells; the BENCH "
+                         "doc grows a 'telemetry' key")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+
+    trace = None
+    if args.trace_out:
+        if args.fused or args.ssm:
+            raise SystemExit("--trace-out drives the default engine sweep "
+                             "(not --fused/--ssm)")
+        from repro.obs import TraceRecorder
+        trace = TraceRecorder()
 
     if args.ssm:
         requests = 4 if args.smoke else args.requests
@@ -379,7 +416,21 @@ def main() -> None:
                               quantized=not args.fp_pool, steps=steps)
     else:
         doc = run_sweep(args.arch, args.slots, args.requests,
-                        args.prompt_len, args.gen_len, args.page_size or 8)
+                        args.prompt_len, args.gen_len, args.page_size or 8,
+                        trace=trace, health=trace is not None)
+    if trace is not None:
+        from repro.numerics.pallas_backend import fallback_count
+        from repro.obs import kernel_costs, write_jsonl
+        n = write_jsonl(trace, args.trace_out)
+        doc["telemetry"] = {
+            "trace_jsonl": args.trace_out,
+            "trace_events": n,
+            "trace_dropped": trace.dropped,
+            "codec_fallbacks": fallback_count(),
+            "kernel_costs": kernel_costs(),
+        }
+        print(f"  wrote {n} trace events to {args.trace_out}",
+              file=sys.stderr)
     text = json.dumps(doc, indent=2)
     if args.out:
         with open(args.out, "w") as f:

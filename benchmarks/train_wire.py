@@ -120,6 +120,38 @@ def fmnist_site_table(result: dict,
     return sites, baseline, deploy
 
 
+def quant_health_table(result: dict) -> dict:
+    """Host-side quant-health of one step's gradient wire (repro.obs):
+    clip/saturation fractions of the actual gradients under the exact
+    scales the ``grad_edge`` / ``dp_wire`` quantizers use. Keys mirror the
+    engine's ``ServeMetrics.summary()['quant_health']`` sites; CI smoke
+    asserts every clip fraction is finite and < 0.5 at the seed config
+    (grad_edge is clip-free by construction — per-tensor-max scale)."""
+    from repro import numerics as N
+    from repro.obs.counters import fraction, pow2_clip_stats, tree_sat_stats
+
+    policy = result["policy"]
+    gspec = policy.spec_for("grad_edge")
+    leaves = [g for g in jax.tree_util.tree_leaves(result["grads"])
+              if hasattr(g, "dtype")
+              and jnp.issubdtype(g.dtype, jnp.floating)]
+    clipped = total = 0
+    for g in leaves:
+        step = N.per_tensor_max_scale_log2(g, gspec)
+        c, t = pow2_clip_stats(g, step, gspec.bits)
+        clipped, total = clipped + int(c), total + int(t)
+    gsat, gtot = tree_sat_stats(result["grads"], gspec)
+    wsat, wtot = tree_sat_stats(result["grads"], policy.spec_for("dp_wire"))
+    return {
+        "grad_edge": {"clipped": clipped, "total": total,
+                      "clip_fraction": clipped / max(total, 1),
+                      "sat_fraction": float(fraction(gsat, gtot))},
+        "dp_wire": {"total": int(wtot),
+                    "clip_fraction": 0.0,   # blockwise per-block-max scale
+                    "sat_fraction": float(fraction(wsat, wtot))},
+    }
+
+
 def _time(fn, *args, iters: int, warmup: int = 1) -> float:
     out = None
     for _ in range(warmup):
@@ -132,12 +164,22 @@ def _time(fn, *args, iters: int, warmup: int = 1) -> float:
     return (time.perf_counter() - t0) / iters
 
 
-def run(batch: int, iters: int) -> dict:
+def run(batch: int, iters: int, trace=None) -> dict:
     low = fmnist_low_precision_step(batch)
     sites, baseline, deploy = fmnist_site_table(low)
     t_q = _time(lambda: low["step"](low["new_params"], low["opt"],
                                     low["batch_arrays"], low["residual"]),
                 iters=iters)
+    if trace is not None:
+        # per-step timeline of the low-precision step (the train-side
+        # analogue of the serve bench's decode_step events)
+        for i in range(iters):
+            t0 = time.perf_counter()
+            out = low["step"](low["new_params"], low["opt"],
+                              low["batch_arrays"], low["residual"])
+            jax.block_until_ready(out)
+            trace.emit("train_step", step=i,
+                       dur=time.perf_counter() - t0)
 
     # fp32 shadow (no compression, f32 moments)
     fp = fmnist_low_precision_step(batch, opt_dtype="float32",
@@ -163,6 +205,7 @@ def run(batch: int, iters: int) -> dict:
         "fp32_total_bytes": base,
         "reduction_x": base / total,
         "tt_deploy_reduction_x": deploy["reduction_x"],
+        "quant_health": quant_health_table(low),
     }
 
 
@@ -172,10 +215,23 @@ def main():
     ap.add_argument("--iters", type=int, default=10)
     ap.add_argument("--smoke", action="store_true",
                     help="tiny iteration count for CI")
+    ap.add_argument("--trace-out", default="",
+                    help="write per-step train_step trace events (JSONL)")
     ap.add_argument("--out", default="BENCH_train_wire.json")
     args = ap.parse_args()
 
-    doc = run(args.batch, 2 if args.smoke else args.iters)
+    trace = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+        trace = TraceRecorder()
+    doc = run(args.batch, 2 if args.smoke else args.iters, trace=trace)
+    if trace is not None:
+        from repro.obs import kernel_costs, write_jsonl
+        n = write_jsonl(trace, args.trace_out)
+        doc["telemetry"] = {"trace_jsonl": args.trace_out,
+                            "trace_events": n,
+                            "kernel_costs": kernel_costs()}
+        print(f"[train_wire] wrote {n} trace events to {args.trace_out}")
     text = json.dumps(doc, indent=2)
     if args.out == "-":
         sys.stdout.write(text + "\n")

@@ -49,6 +49,7 @@ class QuantConfig:
     target_lo: float = 0.1
     target_hi: float = 0.3
     ema: float = 0.9                # running-mean decay for |x| tracking
+    health: bool = False            # trace quant-health aggregates (repro.obs)
 
     def policy(self):
         """Lower onto the unified numerics policy (lazy import: configs

@@ -11,11 +11,21 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..numerics.pallas_backend import interpret_mode as _interpret
 from ..numerics.pallas_backend import native_backend
+from ..obs.counters import record_kernel_call
 from . import paged_attention as PA
 from . import ttm_pe1, ttm_pe2, ttm_pe3
+
+
+def _nbytes(*arrs) -> int:
+    """Modeled bytes moved by a kernel call: operand + result footprints
+    from static shape/dtype (works on tracers — recorded at trace time, one
+    entry per compiled specialization; see obs.counters.record_kernel_call)."""
+    return sum(int(np.prod(a.shape)) * jnp.dtype(a.dtype).itemsize
+               for a in arrs)
 
 
 def _pad_to(x: jax.Array, mults: tuple[int, ...]) -> jax.Array:
@@ -51,29 +61,33 @@ def pe1(z: jax.Array, g: jax.Array, step_log2: float | None = None,
     from ..numerics import QuantSpec
     spec = QuantSpec("pow2", bits) if bits is not None else None
     step = 0.0 if step_log2 is None else step_log2
+    record_kernel_call(f"pe1.{impl}", bytes_moved=_nbytes(z, g)
+                       + z.shape[0] * g.shape[1] * z.dtype.itemsize)
     if impl == "jnp":
         from ..numerics.codecs import get_codec
         from . import ref
-        acc = ref.pe1_ref(z, g).astype(jnp.float32)
-        if spec is not None:
-            acc = get_codec(spec, "reference").epilogue(
-                acc, spec, jnp.asarray(step, jnp.float32))
-        return acc.astype(z.dtype)
+        with jax.named_scope("repro.ops.pe1"):
+            acc = ref.pe1_ref(z, g).astype(jnp.float32)
+            if spec is not None:
+                acc = get_codec(spec, "reference").epilogue(
+                    acc, spec, jnp.asarray(step, jnp.float32))
+            return acc.astype(z.dtype)
     if impl != "pallas":
         raise ValueError(f"unknown pe1 impl {impl!r}")
     a, b, c = z.shape
     b2, d, c2 = g.shape
     assert b == b2 and c == c2, (z.shape, g.shape)
-    zf = z.reshape(a, b * c)
-    gf = jnp.transpose(g, (0, 2, 1)).reshape(b * c, d)
-    bm = _blk(a, 128, 8)
-    bn = _blk(d, 128, 128)
-    bk = _blk(b * c, 512, 128)
-    zp = _pad_to(zf, (bm, bk))
-    gp = _pad_to(gf, (bk, bn))
-    out = ttm_pe1.pe1_matmul(zp, gp, bm=bm, bn=bn, bk=bk, spec=spec,
-                             step_log2=step, interpret=_interpret())
-    return out[:a, :d]
+    with jax.named_scope("repro.ops.pe1"):
+        zf = z.reshape(a, b * c)
+        gf = jnp.transpose(g, (0, 2, 1)).reshape(b * c, d)
+        bm = _blk(a, 128, 8)
+        bn = _blk(d, 128, 128)
+        bk = _blk(b * c, 512, 128)
+        zp = _pad_to(zf, (bm, bk))
+        gp = _pad_to(gf, (bk, bn))
+        out = ttm_pe1.pe1_matmul(zp, gp, bm=bm, bn=bn, bk=bk, spec=spec,
+                                 step_log2=step, interpret=_interpret())
+        return out[:a, :d]
 
 
 @jax.jit
@@ -82,14 +96,17 @@ def pe2(z: jax.Array, g: jax.Array) -> jax.Array:
     a, b, c = z.shape
     b2, d = g.shape
     assert b == b2, (z.shape, g.shape)
-    ba = _blk(a, 8, 8)
-    bd = _blk(d, 128, 128)
-    bc = _blk(c, 128, 128)
-    zp = _pad_to(z, (ba, 1, bc))
-    gp = _pad_to(g, (1, bd))
-    out = ttm_pe2.pe2_batched(zp, gp, ba=ba, bd=bd, bc=bc,
-                              interpret=_interpret())
-    return out[:a, :d, :c]
+    record_kernel_call("pe2", bytes_moved=_nbytes(z, g)
+                       + a * d * c * z.dtype.itemsize)
+    with jax.named_scope("repro.ops.pe2"):
+        ba = _blk(a, 8, 8)
+        bd = _blk(d, 128, 128)
+        bc = _blk(c, 128, 128)
+        zp = _pad_to(z, (ba, 1, bc))
+        gp = _pad_to(g, (1, bd))
+        out = ttm_pe2.pe2_batched(zp, gp, ba=ba, bd=bd, bc=bc,
+                                  interpret=_interpret())
+        return out[:a, :d, :c]
 
 
 @jax.jit
@@ -98,14 +115,17 @@ def pe3(ybar: jax.Array, x: jax.Array) -> jax.Array:
     b, j = ybar.shape
     b2, i = x.shape
     assert b == b2, (ybar.shape, x.shape)
-    bj = _blk(j, 128, 8)
-    bi = _blk(i, 128, 128)
-    bb = _blk(b, 256, 8)
-    yp = _pad_to(ybar, (bb, bj))
-    xp = _pad_to(x, (bb, bi))
-    out = ttm_pe3.pe3_outer(yp, xp, bj=bj, bi=bi, bb=bb,
-                            interpret=_interpret())
-    return out[:j, :i]
+    record_kernel_call("pe3", bytes_moved=_nbytes(ybar, x)
+                       + j * i * ybar.dtype.itemsize)
+    with jax.named_scope("repro.ops.pe3"):
+        bj = _blk(j, 128, 8)
+        bi = _blk(i, 128, 128)
+        bb = _blk(b, 256, 8)
+        yp = _pad_to(ybar, (bb, bj))
+        xp = _pad_to(x, (bb, bi))
+        out = ttm_pe3.pe3_outer(yp, xp, bj=bj, bi=bi, bb=bb,
+                                interpret=_interpret())
+        return out[:j, :i]
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))
@@ -113,8 +133,10 @@ def quantize_fused(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
     """Fused fake-quant over an arbitrary-shape tensor — the pow2 Pallas
     codec of ``repro.numerics`` (which pads/reshapes internally)."""
     from ..numerics import QuantSpec, fake_quant
-    return fake_quant(x, QuantSpec("pow2", bits), step_log2,
-                      backend="pallas")
+    record_kernel_call("quantize_fused", bytes_moved=2 * _nbytes(x))
+    with jax.named_scope("repro.ops.quantize_fused"):
+        return fake_quant(x, QuantSpec("pow2", bits), step_log2,
+                          backend="pallas")
 
 
 def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
@@ -138,16 +160,29 @@ def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
     """
     if impl == "auto":
         impl = "pallas" if native_backend() else "jnp"
+    # bytes actually touched by the page walk: the whole pool row array is
+    # an operand, but only each slot's mapped pages move — model the table-
+    # addressable footprint (B * pages_per_slot pages) plus q in and out
+    pages_touched = table.shape[0] * table.shape[1]
+    page_bytes = (int(np.prod(kdata.shape[1:])) + int(np.prod(vdata.shape[1:]))
+                  ) * jnp.dtype(kdata.dtype).itemsize
+    record_kernel_call(f"paged_attention.{impl}",
+                       bytes_moved=pages_touched * page_bytes
+                       + 2 * _nbytes(q))
     if impl == "pallas":
-        return PA.paged_attention_kernel(
-            q, kdata, vdata, kscale, vscale, table, lens,
-            page_size=page_size, quantized=quantized, interpret=_interpret())
+        with jax.named_scope("repro.ops.paged_attention"):
+            return PA.paged_attention_kernel(
+                q, kdata, vdata, kscale, vscale, table, lens,
+                page_size=page_size, quantized=quantized,
+                interpret=_interpret())
     if impl == "jnp":
         if page_chunk is None:
             page_chunk = max(1, 256 // page_size)
-        return PA.paged_attention_jnp(
-            q, kdata, vdata, kscale, vscale, table, lens,
-            page_size=page_size, quantized=quantized, page_chunk=page_chunk)
+        with jax.named_scope("repro.ops.paged_attention"):
+            return PA.paged_attention_jnp(
+                q, kdata, vdata, kscale, vscale, table, lens,
+                page_size=page_size, quantized=quantized,
+                page_chunk=page_chunk)
     raise ValueError(f"unknown paged_attention impl {impl!r}")
 
 

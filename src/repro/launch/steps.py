@@ -74,6 +74,31 @@ def _quantize_grad_edge(grads, scales, policy: NumericsPolicy):
     return gq, policy.update_scales(scales, {"grad_edge": gm})
 
 
+def _train_health(grads, scales, policy: NumericsPolicy) -> dict:
+    """Per-site quant-health aggregates of one train step (repro.obs).
+
+    Traced only when ``policy.health`` is on — the default step's jaxpr is
+    byte-identical to a health-free build (Python gate, no dead device
+    code). ``grads`` is the tree entering the grad_edge quantizer:
+    ``sat_fraction`` counts codes pinned at the 16-bit grid edge under the
+    per-tensor-max scales the quantizer itself uses (clip-free by
+    construction, so saturation here means values AT max|g|). Managed-site
+    ScaleStates report their §3.3 statistic and whether it sits inside the
+    policy's target band."""
+    from ..obs.counters import fraction, tree_sat_stats
+    sat, tot = tree_sat_stats(grads, policy.spec_for("grad_edge"))
+    health = {"grad_edge": {"sat_fraction": fraction(sat, tot),
+                            "saturated": sat, "total": tot}}
+    for site, st in scales.items():
+        health.setdefault(site, {})
+        health[site]["scale_log2"] = st.log2.astype(jnp.float32)
+        health[site]["mean_abs"] = st.mean_abs
+        health[site]["in_band"] = jnp.asarray(
+            (st.mean_abs >= policy.target_lo)
+            & (st.mean_abs <= policy.target_hi), jnp.float32)
+    return health
+
+
 def _ce_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
     """Mean CE over positions with label >= 0."""
     logits = logits.astype(jnp.float32)
@@ -149,6 +174,10 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
             from ..optim.grad_compress import compress_decompress
             grads, residual = compress_decompress(
                 grads, residual, policy.spec_for("dp_wire"))
+        # pre-quant grads held only when health tracing is on (Python gate:
+        # the default step's jaxpr carries no health ops at all)
+        want_health = policy.health and policy.enable and scales is not None
+        pre_edge = grads if want_health else None
         grads, scales = _quantize_grad_edge(grads, scales, policy)
         if tcfg.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
@@ -159,6 +188,8 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
         # closed-form Eq.(4) rank-hyperparameter update (no-op if TT off)
         params = lm_lambda_update(params, lm)
         metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        if want_health:
+            metrics["health"] = _train_health(pre_edge, scales, policy)
         return TrainState(params, opt, state.step + 1, residual,
                           scales), metrics
 
@@ -207,6 +238,8 @@ def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
             from ..optim.grad_compress import compress_decompress
             grads, residual = compress_decompress(
                 grads, residual, policy.spec_for("dp_wire"))
+        want_health = policy.health and policy.enable and scales is not None
+        pre_edge = grads if want_health else None
         grads, scales = _quantize_grad_edge(grads, scales, policy)
         if tcfg.grad_clip > 0:
             grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
@@ -215,8 +248,11 @@ def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
         lr = lr_at(state.step, tcfg)
         params, opt = adam_update(state.params, grads, state.opt, lr, tcfg)
         params = lm_lambda_update(params, lm)
-        return TrainState(params, opt, state.step + 1, residual, scales), \
-            {"loss": lsum / n_micro, "gnorm": gnorm, "lr": lr}
+        metrics = {"loss": lsum / n_micro, "gnorm": gnorm, "lr": lr}
+        if want_health:
+            metrics["health"] = _train_health(pre_edge, scales, policy)
+        return TrainState(params, opt, state.step + 1, residual,
+                          scales), metrics
 
     return train_step
 

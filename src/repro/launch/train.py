@@ -88,7 +88,12 @@ def make_batch_fn(cfg: ModelConfig, batch: int, seq: int, seed: int):
 
 
 def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
-          batch: int, seq: int, mesh=None, verbose: bool = True):
+          batch: int, seq: int, mesh=None, verbose: bool = True,
+          trace=None):
+    """``trace``: optional ``repro.obs.TraceRecorder`` — when attached the
+    loop emits one host-side ``train_step`` event per step (step, loss,
+    dur, and the step's quant-health aggregates when the policy traces
+    them). No recorder → the loop is byte-for-byte the old one."""
     plan = make_plan(mesh, strategy)
     lm = build_lm(cfg)
     key = jax.random.PRNGKey(tcfg.seed)
@@ -129,6 +134,17 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
             losses.append(loss)
             dt = time.time() - t0
             slow = monitor.observe(dt)
+            if trace is not None:
+                ev = {"step": step, "loss": loss, "dur": dt}
+                if "health" in metrics:
+                    h = metrics["health"]
+                    ev["grad_sat_fraction"] = float(
+                        h["grad_edge"]["sat_fraction"])
+                    if "activation" in h:
+                        ev["act_scale_log2"] = float(
+                            h["activation"]["scale_log2"])
+                        ev["act_in_band"] = float(h["activation"]["in_band"])
+                trace.emit("train_step", **ev)
             if verbose and (step % tcfg.log_every == 0 or slow):
                 extra = "  [STRAGGLER]" if slow else ""
                 print(f"[train] step {step} loss {loss:.4f} "
@@ -164,11 +180,17 @@ def main():
     ap.add_argument("--ckpt-every", type=int, default=200)
     ap.add_argument("--mesh", default=None,
                     help="e.g. 2x2 to use a dev mesh (needs devices)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write per-step train_step trace events (JSONL)")
     args = ap.parse_args()
 
     cfg, strategy = get_model_cfg(args.arch, args.reduced)
     if args.tt:
         cfg = C.with_tt(cfg, max_rank=32)
+    if args.trace_out and cfg.quant.enable:
+        # trace run: also switch on the in-step quant-health aggregates
+        import dataclasses
+        cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, health=True))
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(5, args.steps // 20),
                        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
@@ -176,7 +198,16 @@ def main():
     if args.mesh:
         d, m = (int(x) for x in args.mesh.split("x"))
         mesh = jax.make_mesh((d, m), ("data", "model"))
-    train(cfg, strategy, tcfg, batch=args.batch, seq=args.seq, mesh=mesh)
+    trace = None
+    if args.trace_out:
+        from ..obs import TraceRecorder
+        trace = TraceRecorder()
+    train(cfg, strategy, tcfg, batch=args.batch, seq=args.seq, mesh=mesh,
+          trace=trace)
+    if trace is not None:
+        from ..obs import write_jsonl
+        n = write_jsonl(trace, args.trace_out)
+        print(f"[train] wrote {n} trace events to {args.trace_out}")
 
 
 if __name__ == "__main__":

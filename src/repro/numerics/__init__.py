@@ -12,10 +12,10 @@ data-parallel gradient wire, and the serving KV-cache.
 - ``NumericsPolicy`` named sites -> specs, JSON-round-trippable, owner of
   the managed scale-state tree (§3.3 scale manager)
 """
-from .codecs import (decode, encode, fake_quant, get_codec,  # noqa: F401
-                     pack_int4, per_tensor_max_scale_log2, pow2_fake_quant,
-                     pow2_qdq, register_codec, roundtrip, unpack_int4,
-                     BACKENDS)
+from .codecs import (decode, encode, fake_quant, fake_quant_stats,  # noqa: F401
+                     get_codec, pack_int4, per_tensor_max_scale_log2,
+                     pow2_fake_quant, pow2_qdq, register_codec, roundtrip,
+                     unpack_int4, BACKENDS)
 from .policy import (NumericsPolicy, SITES, ScaleState,  # noqa: F401
                      init_scale, policy_from_quant_config, step_log2,
                      update_scale)

@@ -252,6 +252,25 @@ def fake_quant(x: jax.Array, spec: QuantSpec, scale=None,
     return get_codec(spec, backend).fake_quant(x, spec, scale)
 
 
+def fake_quant_stats(x: jax.Array, spec: QuantSpec, scale=None,
+                     backend: str = "reference"
+                     ) -> tuple[jax.Array, tuple[jax.Array, jax.Array]]:
+    """``fake_quant`` with a quant-health aux output: ``(y, (clipped,
+    total))`` int32 counts of values outside the representable range.
+
+    The counts are integer-exact functions of (x, scale), so the reference
+    and Pallas backends agree BITWISE (tests/test_obs.py). For blockwise
+    specs the scale is data-derived (absmax covers the range), so the aux
+    reports saturated codes instead — the same "pinned at the grid edge"
+    health signal."""
+    from ..obs.counters import pow2_clip_stats, saturation_counts
+    y = fake_quant(x, spec, scale, backend)
+    if spec.kind == "pow2":
+        return y, pow2_clip_stats(x, scale, spec.bits)
+    return y, saturation_counts(get_codec(spec, backend).encode(x, spec,
+                                                                scale))
+
+
 def roundtrip(x: jax.Array, spec: QuantSpec, scale=None,
               backend: str = "reference") -> jax.Array:
     """decode(encode(x)) without STE — pure value quantization (used on

@@ -34,28 +34,29 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .codecs import (Pow2Reference, BlockwiseReference, _p2fq_bwd, _p2fq_fwd,
-                     register_codec)
+from ..obs.counters import registry as _counters
+from .codecs import (Pow2Reference, BlockwiseReference, _bcast, _p2fq_bwd,
+                     _p2fq_fwd, register_codec)
 from .spec import QTensor, QuantSpec, packed_trailing, qrange
 
-# Count of calls that fell back to the reference codec because the scale
-# array did not fit a kernel layout (incremented at trace time; tests
-# reset + assert zero around pool-shaped calls).
-_FALLBACKS = 0
+# Calls that fell back to the reference codec because the scale array did
+# not fit a kernel layout live in the obs counter registry under this name
+# (incremented at trace time; tests reset + assert zero around pool-shaped
+# calls). fallback_count()/reset_fallback_count() are kept as the
+# long-standing API — they are now views over the registry counter.
+FALLBACK_COUNTER = "numerics.codec_fallback"
 
 
 def fallback_count() -> int:
-    return _FALLBACKS
+    return _counters.get(FALLBACK_COUNTER)
 
 
 def reset_fallback_count() -> None:
-    global _FALLBACKS
-    _FALLBACKS = 0
+    _counters.reset(FALLBACK_COUNTER)
 
 
 def _note_fallback() -> None:
-    global _FALLBACKS
-    _FALLBACKS += 1
+    _counters.inc(FALLBACK_COUNTER)
 
 
 def interpret_mode() -> bool:
@@ -328,6 +329,32 @@ _p2_fake_quant_pallas.defvjp(
     _p2fq_bwd)
 
 
+def _p2_fq_rows_kernel(x_ref, s_ref, o_ref, *, bits: int):
+    # per-row fused qdq in x.dtype — the multi-scale twin of _p2_fq_kernel,
+    # matching the reference pow2_qdq grid (scale cast to x.dtype) exactly
+    step = jnp.exp2(s_ref[...].astype(jnp.float32)).astype(x_ref.dtype)
+    lo, hi = qrange(bits)
+    x = x_ref[...]
+    o_ref[...] = (jnp.clip(jnp.round(x / step), lo, hi) * step
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def _p2_fake_quant_rows(x, scale_log2, bits):
+    x2d, srow = _rowwise(x, scale_log2)
+    out = _rowscale_call(functools.partial(_p2_fq_rows_kernel, bits=bits),
+                         x2d, srow, x.dtype)
+    return out.reshape(x.shape)
+
+
+# clipped STE with the reference's leading-dim broadcast semantics: the
+# inside-range mask comes from _p2fq_fwd on the _bcast-shaped scale
+_p2_fake_quant_rows.defvjp(
+    lambda x, s, bits: (_p2_fake_quant_rows(x, s, bits),
+                        _p2fq_fwd(x, _bcast(s, x.ndim), bits)[1]),
+    _p2fq_bwd)
+
+
 class Pow2Pallas(Pow2Reference):
     backend = "pallas"
 
@@ -405,14 +432,15 @@ class Pow2Pallas(Pow2Reference):
         return out.reshape(qt.codes.shape)
 
     def fake_quant(self, x, spec: QuantSpec, scale):
-        if not self._scalar(scale):
-            # non-scalar fake-quant stays on the reference path (same
-            # leading-dim broadcast semantics as encode/decode via _bcast;
-            # no call site needs a fused multi-scale STE kernel yet — the
-            # KV pool only encodes/decodes)
+        if self._scalar(scale):
+            return _p2_fake_quant_pallas(x, scale, spec.bits)
+        x = jnp.asarray(x)
+        if _rowwise(x, scale) is None:
+            # scale doesn't follow the leading-dim broadcast convention
+            # (e.g. per-element scales): reference fallback, counted
             _note_fallback()
             return super().fake_quant(x, spec, scale)
-        return _p2_fake_quant_pallas(x, scale, spec.bits)
+        return _p2_fake_quant_rows(x, jnp.asarray(scale), spec.bits)
 
 
 # ---------------------------------------------------------------------------

@@ -109,6 +109,11 @@ class NumericsPolicy:
     target_lo: float = 0.1
     target_hi: float = 0.3
     ema: float = 0.9
+    # quant-health telemetry (repro.obs): when True, step functions and the
+    # serve pools trace the per-site clip/saturation/drift aggregates as
+    # extra outputs. Off by default — the disabled path's jaxpr is
+    # unchanged (the health code is Python-gated at trace time).
+    health: bool = False
 
     def spec_for(self, site: str) -> QuantSpec:
         for name, spec in self.sites:
@@ -159,6 +164,7 @@ class NumericsPolicy:
             "target_lo": self.target_lo,
             "target_hi": self.target_hi,
             "ema": self.ema,
+            "health": self.health,
         }
 
     @classmethod
@@ -168,7 +174,8 @@ class NumericsPolicy:
         return cls(enable=d["enable"], sites=sites,
                    target_lo=d.get("target_lo", 0.1),
                    target_hi=d.get("target_hi", 0.3),
-                   ema=d.get("ema", 0.9))
+                   ema=d.get("ema", 0.9),
+                   health=d.get("health", False))
 
     def to_json(self) -> str:
         # no sort_keys: the sites map is ordered and the order is identity
@@ -186,4 +193,5 @@ def policy_from_quant_config(qc) -> NumericsPolicy:
     return NumericsPolicy(
         enable=qc.enable,
         sites=_default_sites(qc.weight_bits, qc.act_bits, qc.grad_bits),
-        target_lo=qc.target_lo, target_hi=qc.target_hi, ema=qc.ema)
+        target_lo=qc.target_lo, target_hi=qc.target_hi, ema=qc.ema,
+        health=getattr(qc, "health", False))

@@ -1,0 +1,204 @@
+"""Counter registry + quant-health aggregates — the counter half of
+``repro.obs``.
+
+Two kinds of counter live here, matching where the information exists:
+
+- **Host counters** (``CounterRegistry``): plain named integers incremented
+  from Python — codec fallbacks, kernel trace events, recorder drops. The
+  registry replaces ad-hoc module globals (``pallas_backend._FALLBACKS`` is
+  now the ``numerics.codec_fallback`` counter; its ``fallback_count()`` /
+  ``reset_fallback_count()`` API is preserved as a thin view). Counters
+  here are *trace-time* for anything called under ``jax.jit`` — a kernel
+  wrapper's Python body runs once per compiled specialization, so
+  ``kernel.*.calls`` counts traced calls, not device executions (that is
+  exactly the granularity the autotuner/bench consumers need: one row per
+  (kernel, shape) with its modeled cost).
+
+- **Device aggregates** (``pow2_clip_stats`` & friends): jit-safe scalar
+  reductions computed next to a quantization site — clip/saturation counts
+  and scale-drift sums. They are integer-exact, so the reference and Pallas
+  codec backends agree BITWISE on the counts (asserted by tests/test_obs.py
+  — both backends produce bit-identical codes, and the counts are pure
+  functions of values + scale). Everything is off-by-default: a step
+  function only traces these when its policy/engine asks for health
+  (``NumericsPolicy.health``), so the disabled path's jaxpr is unchanged.
+
+Interpretation guide (what the numbers mean) lives in README
+"Observability"; the short version: ``clip_fraction`` is the fraction of
+pre-quant values outside the representable range (persistent > ~1e-2 on the
+KV site means decode amplitudes outgrew the prefill-frozen scale),
+``sat_fraction`` the fraction of *codes* pinned at the grid edge (the
+post-hoc view of the same failure), ``scale_drift`` the mean |Δlog2| of
+re-chosen per-tensor scales (state-cache amplitude dynamics).
+"""
+from __future__ import annotations
+
+import threading
+
+import jax
+import jax.numpy as jnp
+
+from ..numerics.codecs import _bcast
+from ..numerics.spec import QTensor, QuantSpec, qrange
+
+# ---------------------------------------------------------------------------
+# Host counter registry
+# ---------------------------------------------------------------------------
+
+
+class CounterRegistry:
+    """Named monotonic host counters. Thread-safe, cheap, process-local.
+
+    Names are dotted paths (``numerics.codec_fallback``,
+    ``kernel.pe1.calls``); ``snapshot()`` returns a plain dict for
+    JSON emission.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._c: dict[str, int] = {}
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._c[name] = self._c.get(name, 0) + n
+
+    def get(self, name: str) -> int:
+        return self._c.get(name, 0)
+
+    def reset(self, name: str | None = None) -> None:
+        """Reset one counter, or every counter when ``name`` is None."""
+        with self._lock:
+            if name is None:
+                self._c.clear()
+            else:
+                self._c.pop(name, None)
+
+    def snapshot(self, prefix: str = "") -> dict[str, int]:
+        with self._lock:
+            return {k: v for k, v in sorted(self._c.items())
+                    if k.startswith(prefix)}
+
+
+#: Process-default registry — the one ``repro.numerics`` and
+#: ``repro.kernels`` report into.
+registry = CounterRegistry()
+
+
+def record_kernel_call(name: str, *, bytes_moved: int = 0,
+                       flops: int = 0) -> None:
+    """Note one traced call of a wrapped kernel with its modeled cost.
+
+    Called from the kernel wrappers' Python bodies (``kernels/ops.py``), so
+    under jit this fires once per compiled specialization — the per-(kernel,
+    shape) cost table benches and the future autotuner read via
+    ``kernel_costs()``."""
+    registry.inc(f"kernel.{name}.calls")
+    if bytes_moved:
+        registry.inc(f"kernel.{name}.bytes", bytes_moved)
+    if flops:
+        registry.inc(f"kernel.{name}.flops", flops)
+
+
+def kernel_costs() -> dict[str, dict[str, int]]:
+    """Per-kernel cost table: {kernel: {calls, bytes, flops}}."""
+    out: dict[str, dict[str, int]] = {}
+    for k, v in registry.snapshot("kernel.").items():
+        name, field = k[len("kernel."):].rsplit(".", 1)
+        out.setdefault(name, {})[field] = v
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Device aggregates (jit-safe, integer-exact)
+# ---------------------------------------------------------------------------
+
+def pow2_clip_stats(x: jax.Array, scale_log2, bits: int,
+                    valid: jax.Array | None = None
+                    ) -> tuple[jax.Array, jax.Array]:
+    """(clipped, total) int32 counts of ``x`` against the pow-2 grid at
+    ``scale_log2`` (leading-dim broadcast, the codec ``_bcast`` convention).
+
+    ``clipped`` counts pre-quant values strictly outside the representable
+    code range — the elements ``encode``/``fake_quant`` would saturate.
+    ``valid`` (optional, broadcastable bool) restricts both counts to real
+    rows (active slots; padding never counts). Integer-exact, so every
+    backend agrees bitwise."""
+    lo, hi = qrange(bits)
+    step = jnp.exp2(_bcast(jnp.asarray(scale_log2), x.ndim)
+                    .astype(jnp.float32))
+    r = x.astype(jnp.float32) / step
+    outside = (r < lo) | (r > hi)
+    if valid is None:
+        return (jnp.sum(outside.astype(jnp.int32)),
+                jnp.asarray(x.size, jnp.int32))
+    v = jnp.broadcast_to(valid, outside.shape)
+    return (jnp.sum((outside & v).astype(jnp.int32)),
+            jnp.sum(v.astype(jnp.int32)))
+
+
+def saturation_counts(qt: QTensor) -> tuple[jax.Array, jax.Array]:
+    """(saturated, total) int32 counts of codes pinned at the grid edge of
+    an encoded ``QTensor`` — the post-hoc view of ``pow2_clip_stats``
+    (saturated >= clipped: a value exactly at the edge rounds onto it
+    without having been clipped). Packed int4x2 codes are unpacked first so
+    the count is over logical codes, not stored bytes."""
+    spec = qt.spec
+    codes = qt.codes
+    if spec.kind == "pow2" and spec.packed:
+        from ..numerics.codecs import unpack_int4
+        codes = unpack_int4(codes, qt.shape[-1] if qt.shape else 1)
+    if spec.kind == "pow2":
+        lo, hi = qrange(spec.bits)
+    else:   # blockwise: symmetric ±qmax
+        lo, hi = -spec.qmax, spec.qmax
+    c = codes.astype(jnp.int32)
+    sat = jnp.sum(((c <= int(lo)) | (c >= int(hi))).astype(jnp.int32))
+    return sat, jnp.asarray(c.size, jnp.int32)
+
+
+def scale_drift_stats(old_log2: jax.Array, new_log2: jax.Array,
+                      valid: jax.Array | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """(|Δlog2| sum, count) of a re-chosen per-tensor scale array — the
+    state-cache drift statistic (how fast recurrent-state amplitude moves
+    across the pow-2 grid). f32 sum over ``valid`` entries."""
+    d = jnp.abs(new_log2.astype(jnp.float32) - old_log2.astype(jnp.float32))
+    if valid is None:
+        return jnp.sum(d), jnp.asarray(d.size, jnp.float32)
+    v = jnp.broadcast_to(valid, d.shape).astype(jnp.float32)
+    return jnp.sum(d * v), jnp.sum(v)
+
+
+def tree_sat_stats(tree, spec: QuantSpec,
+                   scale_for=None) -> tuple[jax.Array, jax.Array]:
+    """(saturated, total) over every float leaf of ``tree`` encoded under
+    ``spec`` — the grad_edge/dp_wire health aggregate. ``scale_for(leaf)``
+    supplies the pow2 scale per leaf (defaults to per-tensor-max, the
+    clip-free scale the step factories use)."""
+    from ..numerics.codecs import encode, per_tensor_max_scale_log2
+
+    def is_f(g):
+        return hasattr(g, "dtype") and g.dtype != jax.dtypes.float0 \
+            and jnp.issubdtype(g.dtype, jnp.floating)
+
+    sat = jnp.asarray(0, jnp.int32)
+    tot = jnp.asarray(0, jnp.int32)
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if not is_f(leaf):
+            continue
+        if spec.kind == "pow2":
+            step = (per_tensor_max_scale_log2(leaf, spec)
+                    if scale_for is None else scale_for(leaf))
+            qt = encode(leaf, spec, step)
+        else:
+            qt = encode(leaf.reshape(-1), spec)
+        s, t = saturation_counts(qt)
+        sat, tot = sat + s, tot + t
+    return sat, tot
+
+
+def fraction(count: jax.Array, total: jax.Array) -> jax.Array:
+    """count / total as f32, 0 when total == 0 (jit-safe)."""
+    t = jnp.asarray(total, jnp.float32)
+    return jnp.where(t > 0, jnp.asarray(count, jnp.float32)
+                     / jnp.maximum(t, 1.0), 0.0)

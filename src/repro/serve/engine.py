@@ -126,7 +126,8 @@ class Engine:
     """Continuous-batching serving engine over a paged, quantized KV pool."""
 
     def __init__(self, lm: LMDef, params, ecfg: EngineConfig,
-                 plan: ShardPlan | None = None, clock=time.monotonic):
+                 plan: ShardPlan | None = None, clock=time.monotonic,
+                 trace=None):
         cfg = lm.cfg
         if cfg.is_encoder:
             raise NotImplementedError("encoder-only archs have no decode path")
@@ -168,10 +169,22 @@ class Engine:
         self.plan = plan or ShardPlan(mesh=None)
         self.pool = KC.init_pool(lm, self.pcfg)
         self.spool = SC.init_state_pool(lm, self.pcfg.num_slots, self.scfg)
+        # optional obs.TraceRecorder: host-side only — events are emitted
+        # from the untraced step loop, never inside a jitted body, so an
+        # attached recorder leaves every jaxpr unchanged (tests/test_obs.py
+        # asserts the decode jaxpr is byte-identical with/without it)
+        self.trace = trace
+        # quant-health aggregates (repro.obs): Python-gated at trace time so
+        # the disabled decode jaxpr is identical to a health-free build
+        health = ecfg.policy is not None and ecfg.policy.health
+        self._health_kv = health and pcfg.quantized and bool(self._attn_keys)
+        self._health_state = health and squant and bool(self._state_keys)
+        self._health = self._health_kv or self._health_state
         # pure-SSM archs have no token-paged memory: admission is slot-only
         self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk,
-                               paged=bool(self._attn_keys))
+                               paged=bool(self._attn_keys), trace=trace)
         self.metrics = ServeMetrics(clock=clock)
+        self.metrics.num_slots = self.pcfg.num_slots
         self.metrics.cache_bytes = KC.pool_bytes(self.pool)
         self.metrics.cache_bytes_fp32 = 4 * sum(
             int(np.prod(a.shape))
@@ -213,11 +226,17 @@ class Engine:
         reference — its absorbed-weight einsums need a dedicated kernel)."""
         return self.ecfg.fused_attention and sub.mixer_kind == "attn_gqa"
 
-    def _sub_decode(self, pp, x, dsub, ssub, table, lens, active, sub):
+    def _sub_decode(self, pp, x, dsub, ssub, table, lens, active, sub,
+                    health=None):
         cfg = self.lm.cfg
         h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
         positions = A.len_positions(lens, x.shape[0])
         qd, newd = _project(pp["mixer"], h, sub, cfg, positions)
+        if health is not None and self._health_kv:
+            # clip counts of this append vs the prefill-frozen slot scales
+            for name, new in newd.items():
+                health["kv"].append(
+                    KC.append_health(new, ssub[name], active, self.pcfg))
         new_dsub = {name: KC.append_token(dsub[name], ssub[name], new, table,
                                           lens, active, self.pcfg)
                     for name, new in newd.items()}
@@ -243,7 +262,7 @@ class Engine:
         return sub_ffn_decode(pp, x, sub, cfg, self.plan,
                               token_mask=active[:, None]), new_dsub
 
-    def _sub_decode_state(self, pp, x, sd, ss, active, sub):
+    def _sub_decode_state(self, pp, x, sd, ss, active, sub, health=None):
         """One recurrent sublayer of the batched decode step: dequantize
         every slot's state, advance one token through the mixer's
         single-step entry point, requantize active lanes (inactive lanes
@@ -271,6 +290,10 @@ class Engine:
             new_state = {**st1, **st2}
         nd, ns = {}, {}
         for name in shapes:
+            if health is not None and self._health_state:
+                # drift of the re-chosen per-slot scale vs the stored one
+                health["state"].append(SC.write_health(
+                    ss[name], new_state[name], active, self.scfg))
             nd[name], ns[name] = SC.write_layer(sd[name], ss[name],
                                                 new_state[name], active,
                                                 self.scfg)
@@ -278,35 +301,60 @@ class Engine:
 
     def _decode_impl(self, params, pool, spool, table, lens, active, tokens):
         """One batched decode step. tokens: (B,1); lens/active: (B,).
-        Returns (logits (B,V), new KV pool, new state pool)."""
+        Returns (logits (B,V), new KV pool, new state pool) — plus, when
+        quant-health is on (policy.health), a dict of per-site aggregates
+        summed over layers. The health path is Python-gated so a disabled
+        engine's jaxpr is byte-identical to a health-free build."""
         lm = self.lm
         x = embed_tokens(params, tokens, lm)
 
         def body(x, scan_in):
             pp, dl, sl, sd, ss = scan_in
             new, snew_d, snew_s = {}, {}, {}
+            hc = {"kv": [], "state": []} if self._health else None
             for i, sub in enumerate(lm.period):
                 key = f"sub_{i}"
                 if sub.mixer_kind in ("mamba", "rwkv6"):
                     x, (nd, ns) = self._sub_decode_state(
-                        pp[key], x, sd[key], ss[key], active, sub)
+                        pp[key], x, sd[key], ss[key], active, sub, health=hc)
                     snew_d[key], snew_s[key] = nd, ns
                     new[key] = dl[key]
                 else:
                     x, nd = self._sub_decode(pp[key], x, dl[key], sl[key],
-                                             table, lens, active, sub)
+                                             table, lens, active, sub,
+                                             health=hc)
                     new[key] = nd
                     snew_d[key], snew_s[key] = sd[key], ss[key]
+            if self._health:
+                z32 = jnp.asarray(0, jnp.int32)
+                zf = jnp.asarray(0.0, jnp.float32)
+                h = (sum((s[0] for s in hc["kv"]), z32),
+                     sum((s[1] for s in hc["kv"]), z32),
+                     sum((s[0] for s in hc["state"]), z32),
+                     sum((s[1] for s in hc["state"]), z32),
+                     sum((s[2] for s in hc["state"]), zf),
+                     sum((s[3] for s in hc["state"]), zf))
+                return x, (new, snew_d, snew_s, h)
             return x, (new, snew_d, snew_s)
 
-        x, (new_data, new_sdata, new_sscale) = jax.lax.scan(
+        x, ys = jax.lax.scan(
             body, x, (params["layers"], pool["data"], pool["scale_log2"],
                       spool["data"], spool["scale_log2"]))
+        if self._health:
+            new_data, new_sdata, new_sscale, h = ys
+        else:
+            new_data, new_sdata, new_sscale = ys
         x = rms_norm(x, params["final_norm"]["scale"], lm.cfg.norm_eps)
         logits = apply_site(params["head"], x, lm.head, lm.cfg)
-        return (logits[:, 0],
-                {"data": new_data, "scale_log2": pool["scale_log2"]},
-                {"data": new_sdata, "scale_log2": new_sscale})
+        out = (logits[:, 0],
+               {"data": new_data, "scale_log2": pool["scale_log2"]},
+               {"data": new_sdata, "scale_log2": new_sscale})
+        if self._health:
+            # per-layer ys stacked on axis 0: fold to per-step totals
+            keys = ("kv_clipped", "kv_total", "state_clipped", "state_total",
+                    "state_drift_sum", "state_drift_n")
+            out = out + ({k: jnp.sum(v) for k, v in zip(keys, h)},)
+        return out
 
     def _chunk_impl(self, params, pool, spool, tokens, table, slot, start,
                     valid_len):
@@ -403,6 +451,9 @@ class Engine:
         rid = self.sched.submit(req)
         self._orig_prompt[rid] = list(prompt)
         self.metrics.request_submitted(rid)
+        if self.trace is not None:
+            self.trace.emit("submit", rid=rid, prompt_len=len(prompt),
+                            max_new=max_new_tokens)
         return rid
 
     def _sample(self, logits: jax.Array, slots: list[int]) -> np.ndarray:
@@ -420,6 +471,7 @@ class Engine:
 
     def _do_prefill(self, slot: int, st) -> None:
         plen = st.prompt_len
+        t0 = self.trace.clock() if self.trace is not None else 0.0
         chunks = self.sched.prefill_chunks(plen)
         table = jnp.asarray(self.sched.page_table)
         stateful = bool(self._state_keys)
@@ -434,6 +486,9 @@ class Engine:
         last_logits = None
         for ci, (c0, c1) in enumerate(chunks):
             toks = st.req.prompt[c0:c1]
+            if self.trace is not None and len(chunks) > 1:
+                self.trace.emit("prefill_chunk", rid=st.req.rid, slot=slot,
+                                start=c0, len=c1 - c0)
             if ci == 0:
                 # whole-chunk model forward (exact reference numerics),
                 # then scatter the returned cache into the pools. Stateful
@@ -469,6 +524,10 @@ class Engine:
         st.generated.append(tok)
         st.last_token = tok
         self.metrics.request_first_token(st.req.rid)
+        if self.trace is not None:
+            self.trace.emit("prefill", rid=st.req.rid, slot=slot, len=plen,
+                            dur=self.trace.clock() - t0)
+            self.trace.emit("first_token", rid=st.req.rid, slot=slot)
 
     def _finish(self, slot: int) -> None:
         st = self.sched.retire(slot)
@@ -478,6 +537,12 @@ class Engine:
         tokens = full[len(orig):]
         self._completions[rid] = Completion(rid, orig, tokens)
         self.metrics.request_finished(rid, len(tokens))
+        if self.trace is not None:
+            reason = ("max_new"
+                      if len(st.generated) >= st.req.max_new_tokens
+                      else "eos")
+            self.trace.emit("retire", rid=rid, slot=slot,
+                            new_tokens=len(tokens), reason=reason)
 
     # ---- engine iteration ---------------------------------------------
     def step(self) -> None:
@@ -489,6 +554,9 @@ class Engine:
                 break
             slot, st = adm
             self.metrics.request_admitted(st.req.rid, st.prompt_len)
+            if self.trace is not None:
+                self.trace.emit("admit", rid=st.req.rid, slot=slot,
+                                pages=len(sched.slot_pages[slot]))
             self._do_prefill(slot, st)
             if st.done():
                 self._finish(slot)
@@ -502,12 +570,18 @@ class Engine:
             if sched.slots[slot] is None:
                 continue
             while not sched.ensure_page(slot):
+                # capture the victim before retire clears its slot state
+                yst = (sched.slots[sched.admission_order[-1]]
+                       if len(sched.admission_order) > 1 else None)
                 evicted = sched.preempt_youngest()
                 if evicted is None:
                     raise RuntimeError(
                         "KV pool exhausted and nothing to preempt — "
                         "increase num_pages/pages_per_slot")
                 self.metrics.preempted()
+                if self.trace is not None:
+                    self.trace.emit("preempt", rid=yst.req.rid, slot=evicted,
+                                    gen_len=len(yst.generated))
                 if evicted == slot:
                     break
         active_slots = [i for i, s in enumerate(sched.slots) if s is not None]
@@ -518,9 +592,19 @@ class Engine:
         lens = jnp.asarray(sched.lens_vector())
         active = jnp.asarray(sched.active_mask())
         tokens = jnp.asarray(sched.tokens_vector())
-        logits, self.pool, self.spool = self._decode_jit(
-            self.params, self.pool, self.spool, table, lens, active, tokens)
+        t0 = self.trace.clock() if self.trace is not None else 0.0
+        health = None
+        if self._health:
+            logits, self.pool, self.spool, health = self._decode_jit(
+                self.params, self.pool, self.spool, table, lens, active,
+                tokens)
+        else:
+            logits, self.pool, self.spool = self._decode_jit(
+                self.params, self.pool, self.spool, table, lens, active,
+                tokens)
         toks = self._sample(logits, list(range(self.pcfg.num_slots)))
+        dur = (self.trace.clock() - t0) if self.trace is not None else None
+        free_pages = sched.alloc.free_pages if sched.paged else None
         for slot in active_slots:
             st = sched.slots[slot]
             tok = int(toks[slot])
@@ -528,7 +612,23 @@ class Engine:
             st.last_token = tok
             if st.done():
                 self._finish(slot)
-        self.metrics.decode_step(len(active_slots))
+        self.metrics.decode_step(len(active_slots), free_pages=free_pages,
+                                 dur=dur)
+        if self.trace is not None:
+            self.trace.emit("decode_step", step=self.metrics.decode_steps,
+                            n_active=len(active_slots),
+                            free_pages=free_pages, dur=dur)
+        if health is not None:
+            if self._health_kv:
+                self.metrics.record_health(
+                    "kv_cache", int(health["kv_clipped"]),
+                    int(health["kv_total"]))
+            if self._health_state:
+                self.metrics.record_health(
+                    "ssm_state", int(health["state_clipped"]),
+                    int(health["state_total"]),
+                    float(health["state_drift_sum"]),
+                    float(health["state_drift_n"]))
 
     def run(self) -> dict[int, Completion]:
         """Drive until every submitted request has completed."""

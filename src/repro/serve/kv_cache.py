@@ -233,6 +233,21 @@ def append_token(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
     return data_l.at[pages, offs].set(vals)
 
 
+def append_health(new: jax.Array, scale_l: jax.Array, active: jax.Array,
+                  pcfg: PoolConfig) -> tuple[jax.Array, jax.Array]:
+    """(clipped, total) of one decode append against the slots' prefill-
+    frozen scales — the ``kv_cache`` quant-health signal (repro.obs).
+
+    Decode K/V reuse the prompt's scale (see ``append_token``), so a rising
+    clip fraction means decode amplitudes outgrew the prefill range. Same
+    shapes as ``append_token``: new (B, 1, *feat), scale_l (B,), active (B,)
+    bool. Integer-exact — backends bit-agree."""
+    from ..obs.counters import pow2_clip_stats
+    vals = new[:, 0]
+    valid = active.reshape((-1,) + (1,) * (vals.ndim - 1))
+    return pow2_clip_stats(vals, scale_l, pcfg.bits, valid=valid)
+
+
 def write_chunk(data_l: jax.Array, scale_l: jax.Array, vals: jax.Array,
                 table_row: jax.Array, start: jax.Array, valid_len: jax.Array,
                 slot: jax.Array, pcfg: PoolConfig

@@ -1,10 +1,17 @@
 """Serving telemetry: throughput, time-to-first-token, request latency
-percentiles, and cache-pool byte accounting.
+percentiles, cache-pool byte accounting — and, since repro.obs, a per-step
+timeline plus per-site quant-health aggregates.
 
 The engine calls the ``request_*`` hooks as requests move through their
 lifecycle and ``decode_step`` once per batched step; ``summary()`` folds
 everything into a JSON-friendly dict (the schema the throughput benchmark
 emits). The clock is injectable for deterministic tests.
+
+The timeline is the aggregate's raw material: one row per decode step
+(batch fill, free pages, step duration), kept as a plain list so benches
+can dump it next to the trace. TTFT is attributed into queue wait
+(submitted→admitted) and compute (admitted→first token) — the split that
+tells an operator whether to add capacity or speed up prefill.
 """
 from __future__ import annotations
 
@@ -29,6 +36,27 @@ def _pct(xs: list[float], q: float) -> float:
     return float(np.percentile(np.asarray(xs), q)) if xs else 0.0
 
 
+def _mean(xs) -> float:
+    return float(np.mean(np.asarray(xs))) if len(xs) else 0.0
+
+
+@dataclass
+class _SiteHealth:
+    clipped: int = 0
+    total: int = 0
+    drift_sum: float = 0.0
+    drift_n: float = 0.0
+
+    def as_dict(self) -> dict:
+        return {
+            "clipped": self.clipped,
+            "total": self.total,
+            "clip_fraction": self.clipped / self.total if self.total else 0.0,
+            "scale_drift_log2": (self.drift_sum / self.drift_n
+                                 if self.drift_n else 0.0),
+        }
+
+
 @dataclass
 class ServeMetrics:
     clock: Callable[[], float] = time.monotonic
@@ -39,18 +67,30 @@ class ServeMetrics:
     decode_tokens: int = 0      # tokens produced by batched decode steps
     prefill_tokens: int = 0
     preemptions: int = 0
+    num_slots: int = 0          # pool width (set by the engine; 0: unknown)
     cache_bytes: int = 0        # resident KV pool bytes (set by the engine)
     cache_bytes_fp32: int = 0   # what the same pool would cost unquantized
     state_bytes: int = 0        # resident recurrent-state pool bytes
                                 # (SSM/RWKV sublayers; 0 for attn-only archs)
     state_bytes_fp32: int = 0   # fp32 cost of the same state pool
+    # one row per decode step: {"t", "step", "n_active", "free_pages", "dur"}
+    timeline: list = field(default_factory=list)
+    _health: dict[str, _SiteHealth] = field(default_factory=dict)
 
     # ---- lifecycle hooks ----------------------------------------------
+    def _timing(self, rid: int) -> _ReqTiming:
+        # robust to hooks firing out of order (a caller driving the engine
+        # directly may admit/finish a request it never "submitted")
+        t = self._req.get(rid)
+        if t is None:
+            t = self._req[rid] = _ReqTiming(submitted=self.clock())
+        return t
+
     def request_submitted(self, rid: int) -> None:
         self._req[rid] = _ReqTiming(submitted=self.clock())
 
     def request_admitted(self, rid: int, prompt_len: int) -> None:
-        t = self._req[rid]
+        t = self._timing(rid)
         # a re-admitted (preempted) request keeps its original timings
         if t.admitted is None:
             t.admitted = self.clock()
@@ -59,19 +99,23 @@ class ServeMetrics:
             self._t0 = self.clock()
 
     def request_first_token(self, rid: int) -> None:
-        t = self._req[rid]
+        t = self._timing(rid)
         if t.first_token is None:
             t.first_token = self.clock()
 
     def request_finished(self, rid: int, gen_len: int) -> None:
-        t = self._req[rid]
+        t = self._timing(rid)
         t.finished = self.clock()
         t.gen_len = gen_len
         self._t_end = t.finished
 
-    def decode_step(self, n_active: int) -> None:
+    def decode_step(self, n_active: int, free_pages: int | None = None,
+                    dur: float | None = None) -> None:
         self.decode_steps += 1
         self.decode_tokens += n_active
+        self.timeline.append({
+            "t": self.clock(), "step": self.decode_steps,
+            "n_active": n_active, "free_pages": free_pages, "dur": dur})
 
     def prefill(self, n_tokens: int) -> None:
         self.prefill_tokens += n_tokens
@@ -79,15 +123,39 @@ class ServeMetrics:
     def preempted(self) -> None:
         self.preemptions += 1
 
+    # ---- quant health ---------------------------------------------------
+    def record_health(self, site: str, clipped: int, total: int,
+                      drift_sum: float = 0.0, drift_n: float = 0.0) -> None:
+        """Accumulate one step's (clipped, total) counts — host ints, the
+        engine converts the device aggregates — and optional scale-drift
+        (|Δlog2| sum, count) for sites that re-choose scales."""
+        h = self._health.setdefault(site, _SiteHealth())
+        h.clipped += int(clipped)
+        h.total += int(total)
+        h.drift_sum += float(drift_sum)
+        h.drift_n += float(drift_n)
+
     # ---- summary -------------------------------------------------------
     def summary(self) -> dict:
         done = [t for t in self._req.values() if t.finished is not None]
         ttft = [t.first_token - t.submitted for t in done
                 if t.first_token is not None]
+        ttft_queue = [t.admitted - t.submitted for t in done
+                      if t.admitted is not None]
+        ttft_compute = [t.first_token - t.admitted for t in done
+                        if t.first_token is not None and t.admitted is not None]
         lat = [t.finished - t.submitted for t in done]
-        wall = ((self._t_end or self.clock()) - self._t0) \
-            if self._t0 is not None else 0.0
+        # wall clock must include still-running requests — using the last
+        # *finished* time while work is in flight inflates tokens_per_s
+        running = any(t.admitted is not None and t.finished is None
+                      for t in self._req.values())
+        t_end = self.clock() if (running or self._t_end is None) \
+            else self._t_end
+        wall = (t_end - self._t0) if self._t0 is not None else 0.0
         total_gen = sum(t.gen_len for t in done)
+        fills = [r["n_active"] for r in self.timeline]
+        frees = [r["free_pages"] for r in self.timeline
+                 if r["free_pages"] is not None]
         return {
             "requests_completed": len(done),
             "generated_tokens": total_gen,
@@ -97,7 +165,13 @@ class ServeMetrics:
             "wall_s": wall,
             "tokens_per_s": total_gen / wall if wall > 0 else 0.0,
             "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+            "ttft_queue_p50_s": _pct(ttft_queue, 50),
+            "ttft_compute_p50_s": _pct(ttft_compute, 50),
             "latency_p50_s": _pct(lat, 50), "latency_p95_s": _pct(lat, 95),
+            "batch_fill_mean": _mean(fills),
+            "batch_fill_frac": (_mean(fills) / self.num_slots
+                                if self.num_slots else 0.0),
+            "free_pages_min": int(min(frees)) if frees else 0,
             "cache_bytes": self.cache_bytes,
             "cache_bytes_fp32": self.cache_bytes_fp32,
             "cache_reduction": (self.cache_bytes_fp32 / self.cache_bytes
@@ -106,4 +180,6 @@ class ServeMetrics:
             "state_bytes_fp32": self.state_bytes_fp32,
             "state_reduction": (self.state_bytes_fp32 / self.state_bytes
                                 if self.state_bytes else 0.0),
+            "quant_health": {s: h.as_dict()
+                             for s, h in sorted(self._health.items())},
         }

@@ -94,10 +94,11 @@ class Scheduler:
     re-prefill on re-admission)."""
 
     def __init__(self, pcfg: PoolConfig, prefill_chunk: int = 0,
-                 paged: bool = True):
+                 paged: bool = True, trace=None):
         self.pcfg = pcfg
         self.prefill_chunk = prefill_chunk
         self.paged = paged
+        self.trace = trace      # optional obs.TraceRecorder (page events)
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * pcfg.num_slots
         self.alloc = PageAllocator(pcfg.total_pages)
@@ -179,10 +180,16 @@ class Scheduler:
             return False
         self.slot_pages[slot].append(pages[0])
         self.page_table[slot, page_idx] = pages[0]
+        if self.trace is not None:
+            self.trace.emit("page_alloc", slot=slot, page=pages[0],
+                            pos=int(st.next_pos))
         return True
 
     def retire(self, slot: int) -> SlotState:
         st = self.slots[slot]
+        if self.trace is not None and self.slot_pages[slot]:
+            self.trace.emit("page_free", slot=slot,
+                            n=len(self.slot_pages[slot]))
         self.alloc.free(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.page_table[slot, :] = self.pcfg.trash_page

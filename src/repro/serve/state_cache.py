@@ -174,6 +174,26 @@ def write_layer(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
     return jnp.where(amask, new.astype(data_l.dtype), data_l), scale_l
 
 
+def write_health(scale_l: jax.Array, new: jax.Array, active: jax.Array,
+                 scfg: StateCacheConfig
+                 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """(clipped, total, drift_sum, drift_n) of one state overwrite — the
+    ``ssm_state`` quant-health signal (repro.obs).
+
+    The scale is re-chosen per write (``per_tensor_max``), so the signal is
+    scale *drift*: |Δlog2| between the stored and fresh per-slot scales over
+    active lanes (how fast state amplitude walks the pow-2 grid). Clip
+    counts vs the fresh scale are ~0 by construction and reported for
+    schema uniformity."""
+    from ..obs.counters import pow2_clip_stats, scale_drift_stats
+    step = per_tensor_max_scale_log2(
+        new, scfg.spec, reduce_axes=tuple(range(1, new.ndim)))
+    amask = active.reshape((-1,) + (1,) * (new.ndim - 1))
+    clipped, total = pow2_clip_stats(new, step, scfg.bits, valid=amask)
+    dsum, dn = scale_drift_stats(scale_l, step, valid=active)
+    return clipped, total, dsum, dn
+
+
 def write_slot(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
                slot: jax.Array, scfg: StateCacheConfig
                ) -> tuple[jax.Array, jax.Array]:
@@ -223,13 +243,23 @@ def write_prefill(pool: dict, state: dict, slot: jax.Array,
     return {"data": data, "scale_log2": scale}
 
 
-def snapshot_slot(pool: dict, slot: int) -> dict:
+def snapshot_slot(pool: dict, slot: int, trace=None) -> dict:
     """One slot's (codes, scales) across all layers — the park half of
     suspend-without-recompute. Returns the same tree structure with the
-    slot axis indexed out."""
-    return jax.tree.map(lambda a: a[:, slot], pool)
+    slot axis indexed out. ``trace``: optional obs.TraceRecorder — emits a
+    ``state_snapshot`` event with the parked byte count."""
+    snap = jax.tree.map(lambda a: a[:, slot], pool)
+    if trace is not None:
+        trace.emit("state_snapshot", slot=int(slot),
+                   nbytes=sum(l.nbytes
+                              for l in jax.tree_util.tree_leaves(snap)))
+    return snap
 
 
-def restore_slot(pool: dict, snap: dict, slot: jax.Array) -> dict:
+def restore_slot(pool: dict, snap: dict, slot: jax.Array, trace=None) -> dict:
     """Write a ``snapshot_slot`` capture back into ``slot`` (unpark)."""
+    if trace is not None:
+        trace.emit("state_restore", slot=int(slot),
+                   nbytes=sum(l.nbytes
+                              for l in jax.tree_util.tree_leaves(snap)))
     return jax.tree.map(lambda a, s: a.at[:, slot].set(s), pool, snap)

@@ -265,6 +265,31 @@ def test_pallas_fake_quant_has_clipped_ste():
     assert float(g[3]) == 0.0 and float(g[4]) == 0.0
 
 
+def test_pallas_fake_quant_multiscale_no_fallback():
+    """Non-scalar (rowwise-conforming) scales route fake_quant through the
+    fused Pallas kernel — bit-identical values AND gradients (clipped STE)
+    vs the reference, with zero reference fallbacks. Before the fix every
+    non-scalar scale silently dropped to the reference codec."""
+    from repro.numerics import pallas_backend as PB
+    spec = N.QuantSpec("pow2", 8)
+    x = jax.random.normal(jax.random.PRNGKey(12), (4, 6, 8)) * 6
+    sc = jnp.asarray([[-3.0], [-1.0], [0.0], [2.0]])            # (L, 1)
+    PB.reset_fallback_count()
+    fp = N.fake_quant(x, spec, sc, backend="pallas")
+    assert PB.fallback_count() == 0, \
+        "leading-dim scales must run the fused rowwise kernel natively"
+    fr = N.fake_quant(x, spec, sc, backend="reference")
+    np.testing.assert_array_equal(np.asarray(fp), np.asarray(fr))
+    # gradients: clipped straight-through mask, identical across backends
+    gp = jax.grad(lambda v: jnp.sum(
+        N.fake_quant(v, spec, sc, backend="pallas")))(x)
+    gr = jax.grad(lambda v: jnp.sum(
+        N.fake_quant(v, spec, sc, backend="reference")))(x)
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(gr))
+    assert set(np.unique(np.asarray(gp))) <= {0.0, 1.0}
+    assert 0.0 in np.asarray(gp) and 1.0 in np.asarray(gp)
+
+
 def test_pallas_kernel_pads_internally():
     """The old kernel asserted exact (bm, bn) multiples; any shape works now."""
     from repro.kernels.quantize import quantize
