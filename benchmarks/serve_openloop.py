@@ -1,0 +1,211 @@
+"""Open-loop serving benchmark: Poisson arrivals over a shared-prefix
+workload, sweeping the shared-prefix fraction with the radix prefix cache
+on vs off.
+
+Unlike the closed-loop throughput sweep (serve_throughput.py submits
+everything up front), requests arrive on a Poisson clock independent of the
+engine's progress — the open-loop regime where prefill compute is the
+bottleneck that decides goodput and tail TTFT. Each cell drives the engine
+over the same seeded workload (arrival times and prompts are a function of
+the sweep point only, never of the prefix flag) and records goodput,
+p99 TTFT, prefix-hit rate, pages saved, and the prefill-compute savings
+ratio (prompt tokens submitted / prompt tokens actually computed — the
+cache's whole effect; 1.0 with the cache off).
+
+Workload: with probability ``shared_frac`` a prompt is the cell's
+``prefix_len``-token shared preamble plus a short random suffix (the
+system-prompt/few-shot pattern); otherwise a fully random prompt of mixed
+length. Acceptance target: >= 2x prefill-compute savings at the 80%%
+shared-prefix point.
+
+    PYTHONPATH=src python benchmarks/serve_openloop.py --smoke \
+        --out BENCH_prefix_serve.json
+    PYTHONPATH=src python benchmarks/serve_openloop.py \
+        --shared-fracs 0.0 0.5 0.8 --requests 24
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import numpy as np
+
+
+def make_workload(vocab: int, *, requests: int, shared_frac: float,
+                  prefix_len: int, gen_len: int, rate: float, seed: int):
+    """Seeded (arrival_s, prompt, max_new) triples; pure function of the
+    sweep point so prefix-on and prefix-off cells replay the same traffic."""
+    rng = np.random.RandomState(seed)
+    prefix = rng.randint(0, vocab, prefix_len).tolist()
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=requests))
+    # exactly round(frac * n) shared-prefix requests, order shuffled — the
+    # mix is a property of the cell, not of sampling noise (small sweeps
+    # would otherwise jitter the hit rate)
+    shared = np.zeros(requests, bool)
+    shared[:int(round(shared_frac * requests))] = True
+    rng.shuffle(shared)
+    work = []
+    for t, is_shared in zip(arrivals, shared):
+        if is_shared:
+            prompt = prefix + rng.randint(
+                0, vocab, int(rng.randint(1, 9))).tolist()
+        else:
+            prompt = rng.randint(
+                0, vocab,
+                int(rng.randint(max(prefix_len // 4, 2),
+                                prefix_len))).tolist()
+        work.append((float(t), prompt, int(rng.randint(2, gen_len + 1))))
+    return work
+
+
+def bench_cell(lm, params, plan, *, shared_frac: float, prefix_on: bool,
+               requests: int, prefix_len: int, gen_len: int, rate: float,
+               slots: int, page_size: int, seed: int, trace=None) -> dict:
+    from repro.serve import Engine, EngineConfig, PoolConfig
+
+    horizon = prefix_len + 8 + gen_len
+    pcfg = PoolConfig(num_slots=slots, page_size=page_size,
+                      pages_per_slot=-(-horizon // page_size) + 1,
+                      quantized=True)
+    if trace is not None:
+        trace.emit("bench_cell", shared_frac=shared_frac,
+                   prefix="on" if prefix_on else "off")
+    eng = Engine(lm, params,
+                 EngineConfig(pool=pcfg, prefix_cache=prefix_on,
+                              prefill_bucket=8), plan, trace=trace)
+    work = make_workload(lm.cfg.vocab_size, requests=requests,
+                         shared_frac=shared_frac, prefix_len=prefix_len,
+                         gen_len=gen_len, rate=rate, seed=seed)
+    t0 = time.monotonic()
+    i = 0
+    while i < len(work) or eng.sched.has_work():
+        now = time.monotonic() - t0
+        while i < len(work) and work[i][0] <= now:
+            _, prompt, new = work[i]
+            eng.submit(prompt, max_new_tokens=new)
+            i += 1
+        if eng.sched.has_work():
+            eng.step()
+        elif i < len(work):
+            # idle between arrivals: sleep to the next one
+            time.sleep(max(min(work[i][0] - now, 0.05), 0.0))
+    wall = time.monotonic() - t0
+    s = eng.summary()
+    computed = max(s["prefill_tokens"], 1)
+    return {
+        "shared_frac": shared_frac,
+        "prefix_cache": "on" if prefix_on else "off",
+        "requests": requests,
+        "wall_s": wall,
+        "goodput_tokens_per_s": s["tokens_per_s"],
+        "ttft_p50_s": s["ttft_p50_s"],
+        "ttft_p99_s": s["ttft_p99_s"],
+        "prompt_tokens": s["prompt_tokens"],
+        "prefill_tokens_computed": s["prefill_tokens"],
+        "prefill_compute_savings": s["prompt_tokens"] / computed,
+        "prefix_hit_rate": s["prefix_hit_rate"],
+        "prefix_hit_tokens": s["prefix_hit_tokens"],
+        "pages_saved": s["pages_saved"],
+        "cow_forks": s["cow_forks"],
+        "prefix_evictions": s["prefix_evictions"],
+        "preemptions": s["preemptions"],
+        "compile_evictions": s["compile_evictions"],
+    }
+
+
+def run_sweep(arch: str, shared_fracs: list[float], *, requests: int,
+              prefix_len: int, gen_len: int, rate: float, slots: int,
+              page_size: int, seed: int, trace=None) -> dict:
+    import repro.configs as C
+    from repro.models import build_lm, init_lm
+    from repro.sharding import ShardPlan
+
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(0), lm)
+    plan = ShardPlan(mesh=None)
+    cells = []
+    for frac in shared_fracs:
+        for prefix_on in (False, True):
+            cells.append(bench_cell(
+                lm, params, plan, shared_frac=frac, prefix_on=prefix_on,
+                requests=requests, prefix_len=prefix_len, gen_len=gen_len,
+                rate=rate, slots=slots, page_size=page_size,
+                seed=seed + int(frac * 1000), trace=trace))
+            c = cells[-1]
+            print(f"  shared={frac:.1f} prefix={c['prefix_cache']}: "
+                  f"{c['goodput_tokens_per_s']:.1f} tok/s, "
+                  f"hit_rate={c['prefix_hit_rate']:.2f}, "
+                  f"savings={c['prefill_compute_savings']:.2f}x, "
+                  f"pages_saved={c['pages_saved']}", file=sys.stderr)
+    top = max(shared_fracs)
+    best = next(c for c in cells
+                if c["shared_frac"] == top and c["prefix_cache"] == "on")
+    return {"bench": "prefix_serve", "arch": arch,
+            "slots": slots, "page_size": page_size,
+            "prefix_len": prefix_len, "gen_len": gen_len,
+            "arrival_rate_per_s": rate, "requests_per_cell": requests,
+            "backend": jax.default_backend(),
+            "savings_at_top_shared_frac": best["prefill_compute_savings"],
+            "hit_rate_at_top_shared_frac": best["prefix_hit_rate"],
+            "target": {f"shared_frac={top}":
+                       ">=2x prefill-compute savings, hit rate > 0.5"},
+            "cells": cells}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=24)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--prefix-len", type=int, default=48,
+                    help="shared-preamble length (tokens)")
+    ap.add_argument("--gen-len", type=int, default=12)
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--shared-fracs", type=float, nargs="+",
+                    default=[0.0, 0.5, 0.8])
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small CI sweep: fewer requests, 0.8 only")
+    ap.add_argument("--trace-out", default="",
+                    help="record engine events (cache_hit/cow_fork/"
+                         "prefix_evict among them) to this JSONL")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    trace = None
+    if args.trace_out:
+        from repro.obs import TraceRecorder
+        trace = TraceRecorder()
+
+    fracs = [0.8] if args.smoke else args.shared_fracs
+    requests = 10 if args.smoke else args.requests
+    gen = 6 if args.smoke else args.gen_len
+    doc = run_sweep(args.arch, fracs, requests=requests,
+                    prefix_len=args.prefix_len, gen_len=gen,
+                    rate=args.rate, slots=args.slots,
+                    page_size=args.page_size, seed=args.seed, trace=trace)
+    if trace is not None:
+        from repro.obs import write_jsonl
+        n = write_jsonl(trace, args.trace_out)
+        doc["telemetry"] = {"trace_jsonl": args.trace_out,
+                            "trace_events": n,
+                            "trace_dropped": trace.dropped}
+        print(f"  wrote {n} trace events to {args.trace_out}",
+              file=sys.stderr)
+    text = json.dumps(doc, indent=2)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {args.out}", file=sys.stderr)
+    else:
+        print(text)
+
+
+if __name__ == "__main__":
+    main()

@@ -196,7 +196,8 @@ def tt_embed_lookup(eparams: dict, tokens: jax.Array, site: SiteDef,
 
 def _sub_forward(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
                  plan: ShardPlan, positions: jax.Array, *,
-                 return_cache: bool, token_mask: jax.Array | None = None):
+                 return_cache: bool, token_mask: jax.Array | None = None,
+                 capacity_tokens: int | None = None):
     """One sublayer (mixer + optional ffn). Returns (x, aux, cache_entry).
 
     ``token_mask``: optional (B, S) bool of real tokens — serve-prefill
@@ -245,7 +246,8 @@ def _sub_forward(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
         if sub.ffn_kind == "moe":
             out, a = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
                                    mesh=plan.mesh, dp_axes=plan.dp_axes,
-                                   token_mask=token_mask)
+                                   token_mask=token_mask,
+                                   capacity_tokens=capacity_tokens)
             aux = aux + a
         else:
             out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
@@ -280,7 +282,8 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
                embeds: jax.Array | None = None,
                return_cache: bool = False,
                token_mask: jax.Array | None = None,
-               scales: dict | None = None):
+               scales: dict | None = None,
+               capacity_tokens: int | None = None):
     """Train/prefill forward.
 
     tokens: (B, S) int32 and/or embeds: (B, P, D) frontend outputs (vlm:
@@ -320,7 +323,8 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
         for i, sub in enumerate(lm.period):
             x, a, c = _sub_forward(pp[f"sub_{i}"], x, sub, cfg, plan,
                                    positions, return_cache=return_cache,
-                                   token_mask=token_mask)
+                                   token_mask=token_mask,
+                                   capacity_tokens=capacity_tokens)
             if quant_acts:
                 x = _act_quant_edge(x, scales, cfg)
             aux = aux + a
@@ -348,7 +352,8 @@ def lm_forward(params: dict, lm: LMDef, plan: ShardPlan, *,
 
 def sub_ffn_decode(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
                    plan: ShardPlan,
-                   token_mask: jax.Array | None = None) -> jax.Array:
+                   token_mask: jax.Array | None = None,
+                   capacity_tokens: int | None = None) -> jax.Array:
     """Post-mixer FFN/MoE half of a sublayer (shared by the static decode
     path and repro.serve's paged decode/chunk steps).
 
@@ -362,7 +367,8 @@ def sub_ffn_decode(pp: dict, x: jax.Array, sub: SubDef, cfg: ModelConfig,
     if sub.ffn_kind == "moe":
         out, _ = M.moe_forward(pp["moe"], h, sub.ffn, cfg,
                                mesh=plan.mesh, dp_axes=plan.dp_axes,
-                               token_mask=token_mask)
+                               token_mask=token_mask,
+                               capacity_tokens=capacity_tokens)
     else:
         out = F.ffn_forward(pp["ffn"], h, sub.ffn, cfg)
     return x + out

@@ -160,7 +160,8 @@ def _dispatch_local(x2d, topk_idx, topk_w, eparams, d: MoEDef, cfg: ModelConfig,
 
 def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
                 mesh=None, dp_axes=("data",), ep_axis: str = "model",
-                token_mask: jax.Array | None = None
+                token_mask: jax.Array | None = None,
+                capacity_tokens: int | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """x: (B, S, D) -> (out, aux_loss).
 
@@ -170,6 +171,11 @@ def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
     ``token_mask``: optional (B, S) bool of real tokens; masked tokens
     (inactive serve slots, chunked-prefill padding) are dropped from the
     router so they cannot consume expert capacity (see ``_route``).
+
+    ``capacity_tokens``: optional static token-count basis for expert
+    capacity (serve chunked-prefill parity — see ``_capacity``). On the EP
+    path it is the *global* basis applied per shard unscaled; the clamp to
+    local tokens still bounds ``top_k``'s k.
     """
     b, s, dm = x.shape
     x2d = x.reshape(b * s, dm)
@@ -182,7 +188,7 @@ def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
         ep = mesh.shape[ep_axis]
 
     if ep == 1:
-        cap = _capacity(b * s, d)
+        cap = _capacity(b * s, d, capacity_tokens)
         out = _dispatch_local(x2d, topk_idx, topk_w, eparams, d, cfg,
                               jnp.int32(0), d.num_experts, cap)
     else:
@@ -203,7 +209,7 @@ def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
         else:
             tok_spec = P(None, None, None)
             t_loc = b * s
-        cap = _capacity(t_loc, d)
+        cap = _capacity(t_loc, d, capacity_tokens)
 
         # combine: reduce-scatter the partial expert outputs along the seq
         # dim straight into the sequence-parallel layout (half the wire
@@ -247,10 +253,21 @@ def moe_forward(params: dict, x: jax.Array, d: MoEDef, cfg: ModelConfig, *,
     return out, aux
 
 
-def _capacity(tokens_per_shard: int, d: MoEDef) -> int:
+def _capacity(tokens_per_shard: int, d: MoEDef,
+              capacity_tokens: int | None = None) -> int:
     """Per-expert capacity: cf * tokens * k / E, rounded up to 8, clamped to
-    the local token count (decode steps have very few tokens)."""
-    cap = int(d.capacity_factor * tokens_per_shard * d.top_k / d.num_experts)
+    the local token count (decode steps have very few tokens).
+
+    ``capacity_tokens`` overrides the token basis without changing the
+    clamp — the serve engine's chunked-prefill capacity parity: capacity
+    derives from the FULL prompt length, so a chunk never spuriously drops
+    a token that whole-prompt routing would have kept (the clamp keeps
+    ``top_k``'s k <= the visible token count; whenever the full-prompt
+    capacity covers the chunk, per-chunk routing keeps everything, exactly
+    like an un-capacity-bound whole-prompt pass)."""
+    basis = capacity_tokens if capacity_tokens is not None else \
+        tokens_per_shard
+    cap = int(d.capacity_factor * basis * d.top_k / d.num_experts)
     cap = max(8, cap)
     cap = (cap + 7) // 8 * 8
     return min(cap, tokens_per_shard)

@@ -29,6 +29,9 @@ kind                  fields
 ``retire``            rid, slot, new_tokens, reason ("eos"|"max_new")
 ``page_alloc``        slot, page, pos (lazy growth in ``ensure_page``)
 ``page_free``         slot, n (pages released at retire/preempt)
+``cache_hit``         rid, slot, hit_tokens, prompt_len (prefix cache)
+``cow_fork``          rid, slot, src_page, dst_page, tokens (mid-page hit)
+``prefix_evict``      pages, tokens (one LRU leaf freed under pressure)
 ``state_snapshot``    slot, nbytes
 ``state_restore``     slot, nbytes
 ``train_step``        step, loss, dur (train driver loop)

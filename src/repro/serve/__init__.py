@@ -2,9 +2,11 @@
 pow-2 quantized KV-cache pool plus a slot-indexed quantized recurrent-state
 cache for SSM/RWKV mixers (the paper's low-precision numerics applied to
 the serving memory bottleneck)."""
+from .bucketing import CompileCache, bucket_len  # noqa: F401
 from .engine import Completion, Engine, EngineConfig  # noqa: F401
-from .kv_cache import PoolConfig, init_pool, pool_bytes  # noqa: F401
+from .kv_cache import PageRefs, PoolConfig, init_pool, pool_bytes  # noqa: F401
 from .metrics import ServeMetrics  # noqa: F401
+from .prefix import PrefixMatch, RadixPrefixCache  # noqa: F401
 from .sampling import SamplingParams, sample_tokens  # noqa: F401
 from .scheduler import Request, Scheduler  # noqa: F401
 from .state_cache import StateCacheConfig, init_state_pool  # noqa: F401

@@ -1,0 +1,65 @@
+"""Prefill-shape policy for ragged open-loop traffic: length bucketing +
+a bounded LRU of live jitted prefill shapes.
+
+Open-loop traffic brings arbitrary prompt lengths.  Two mechanisms keep
+compilation bounded:
+
+- **Bucketing** (``bucket_len``): prompts pad up to a multiple of
+  ``prefill_bucket`` so nearby lengths share one compiled shape (pad
+  positions are trash-paged and masked out of MoE routing — the engine's
+  existing contract).
+- **Compile-cache eviction** (``CompileCache``): each distinct prefill
+  shape still costs a live compiled executable.  The engine keys one
+  ``jax.jit`` wrapper per shape signature; when ``max_live`` is exceeded
+  the least-recently-used wrapper is dropped, releasing its executable to
+  the garbage collector.  A re-arriving shape recompiles — eviction trades
+  bounded memory for occasional recompiles, and the ``evictions`` counter
+  (surfaced in ServeMetrics as ``compile_evictions``) shows the churn so
+  an operator can size ``max_prefill_shapes``/``prefill_bucket`` sanely.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Callable
+
+
+def bucket_len(n: int, bucket: int) -> int:
+    """Smallest multiple of ``bucket`` >= n (n itself when bucket <= 0)."""
+    if bucket <= 0:
+        return n
+    return n + (-n) % bucket
+
+
+class CompileCache:
+    """LRU map of shape-signature key -> jitted callable.
+
+    One wrapper per key means one compiled executable per key (the engine
+    keys include every static component of the shape: padded length or
+    chunk width, plus the MoE capacity override), so evicting a wrapper
+    frees exactly that shape's executable.  ``max_live <= 0`` disables
+    eviction (the pre-policy unbounded behavior)."""
+
+    def __init__(self, factory: Callable[[tuple], Callable],
+                 max_live: int = 0):
+        self._factory = factory
+        self._max = max_live
+        self._live: "OrderedDict[tuple, Callable]" = OrderedDict()
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._live)
+
+    @property
+    def keys(self) -> list:
+        return list(self._live)
+
+    def get(self, key: tuple) -> Callable:
+        fn = self._live.pop(key, None)
+        if fn is None:
+            fn = self._factory(key)
+            if self._max > 0:
+                while len(self._live) >= self._max:
+                    self._live.popitem(last=False)
+                    self.evictions += 1
+        self._live[key] = fn
+        return fn

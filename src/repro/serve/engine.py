@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from dataclasses import dataclass
+from functools import partial
 from typing import NamedTuple
 
 import jax
@@ -54,8 +55,10 @@ from ..models.lm import LMDef, embed_tokens, lm_forward, sub_ffn_decode
 from ..sharding import ShardPlan
 from . import kv_cache as KC
 from . import state_cache as SC
+from .bucketing import CompileCache, bucket_len
 from .kv_cache import PoolConfig
 from .metrics import ServeMetrics
+from .prefix import RadixPrefixCache
 from .sampling import SamplingParams, sample_tokens
 from .scheduler import Request, Scheduler
 
@@ -90,6 +93,23 @@ class EngineConfig:
                                 # (fused MLA is an open roadmap item)
     fused_impl: str = "auto"    # "auto" | "pallas" | "jnp" — see
                                 # kernels/ops.py::paged_attention
+    prefix_cache: bool = False
+                                # radix-tree COW prefix sharing over the
+                                # paged pool (serve/prefix.py). Attention-
+                                # only archs; archs with recurrent state
+                                # silently take the always-miss path (their
+                                # O(1) state is not per-token addressable)
+    max_prefill_shapes: int = 0
+                                # bound on live jitted prefill shapes
+                                # (whole-prompt + chunk widths); LRU-evicted
+                                # beyond it (serve/bucketing.py). 0:
+                                # unbounded (the pre-policy behavior)
+    moe_capacity_by_prompt: bool = False
+                                # MoE chunked-prefill capacity parity:
+                                # derive expert capacity from the FULL
+                                # prompt length instead of the visible
+                                # chunk, so chunked prefill routes like
+                                # whole-prompt at capacity-bound loads
 
 
 # ---------------------------------------------------------------------------
@@ -180,9 +200,17 @@ class Engine:
         self._health_kv = health and pcfg.quantized and bool(self._attn_keys)
         self._health_state = health and squant and bool(self._state_keys)
         self._health = self._health_kv or self._health_state
+        # prefix sharing needs per-token paged memory: attention-only archs
+        # opt in; any recurrent sublayer routes every request down the
+        # ordinary full-prefill miss path (the cache is simply absent)
+        self._prefix = (RadixPrefixCache(self.pcfg.page_size,
+                                         self.pcfg.total_pages, trace=trace)
+                        if (ecfg.prefix_cache and self._attn_keys
+                            and not self._state_keys) else None)
         # pure-SSM archs have no token-paged memory: admission is slot-only
         self.sched = Scheduler(self.pcfg, ecfg.prefill_chunk,
-                               paged=bool(self._attn_keys), trace=trace)
+                               paged=bool(self._attn_keys), trace=trace,
+                               prefix=self._prefix)
         self.metrics = ServeMetrics(clock=clock)
         self.metrics.num_slots = self.pcfg.num_slots
         self.metrics.cache_bytes = KC.pool_bytes(self.pool)
@@ -196,18 +224,39 @@ class Engine:
         self._completions: dict[int, Completion] = {}
         self._orig_prompt: dict[int, list[int]] = {}
 
-        def prefill(params, tokens, length):
+        def make_prefill(key):
             """Whole-prompt prefill (the model's own forward): numerically
-            the static-serving reference. jit re-specializes per prompt
-            shape; ``prefill_bucket`` bounds how many shapes occur. Bucket
-            padding is masked out of the MoE router via ``token_mask``."""
-            mask = (jnp.arange(tokens.shape[1]) < length)[None]
-            logits, _, cache = lm_forward(params, lm, self.plan,
-                                          tokens=tokens, return_cache=True,
-                                          token_mask=mask)
-            return logits[0, length - 1][None], cache
+            the static-serving reference. One wrapper per (padded length,
+            MoE capacity override) so the compile cache can evict whole
+            executables; ``prefill_bucket`` bounds how many keys occur.
+            Bucket padding is masked out of the MoE router via
+            ``token_mask``."""
+            _, cap = key
 
-        self._prefill_jit = jax.jit(prefill)
+            def prefill(params, tokens, length):
+                mask = (jnp.arange(tokens.shape[1]) < length)[None]
+                logits, _, cache = lm_forward(params, lm, self.plan,
+                                              tokens=tokens,
+                                              return_cache=True,
+                                              token_mask=mask,
+                                              capacity_tokens=cap)
+                return logits[0, length - 1][None], cache
+
+            return jax.jit(prefill)
+
+        def make_chunk(key):
+            """Chunked-prefill step, one wrapper per (chunk width, MoE
+            capacity override) — same eviction story as make_prefill."""
+            _, cap = key
+            return jax.jit(partial(self._chunk_impl, capacity_tokens=cap),
+                           donate_argnums=(1, 2))
+
+        # bounded LRUs of live jitted prefill shapes (serve/bucketing.py);
+        # the decode step is a single fixed shape and never evicts
+        self._prefill_fns = CompileCache(make_prefill,
+                                         max_live=ecfg.max_prefill_shapes)
+        self._chunk_fns = CompileCache(make_chunk,
+                                       max_live=ecfg.max_prefill_shapes)
         self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2))
         self._write_prefill_jit = jax.jit(KC.write_prefill,
                                           donate_argnums=(0,),
@@ -216,7 +265,8 @@ class Engine:
                                         donate_argnums=(0,),
                                         static_argnames=("scfg",))
         self._reset_state_jit = jax.jit(SC.reset_slot, donate_argnums=(0,))
-        self._chunk_jit = jax.jit(self._chunk_impl, donate_argnums=(1, 2))
+        self._fork_jit = jax.jit(KC.fork_page, donate_argnums=(0,))
+        self._adopt_jit = jax.jit(KC.adopt_scales, donate_argnums=(0,))
         self._sample_jit = jax.jit(sample_tokens)
 
     # ---- jitted step bodies -------------------------------------------
@@ -357,12 +407,17 @@ class Engine:
         return out
 
     def _chunk_impl(self, params, pool, spool, tokens, table, slot, start,
-                    valid_len):
+                    valid_len, capacity_tokens=None):
         """Chunked-prefill step for one slot. Attention sublayers write the
         chunk's K/V into the pool and attend over the slot's full history;
         recurrent sublayers scan the chunk from the slot's carried state and
         write the end-of-chunk state back (stateful archs pad no chunks, so
-        ``valid_len == S`` for them). tokens: (1,S)."""
+        ``valid_len == S`` for them). tokens: (1,S).
+
+        ``capacity_tokens`` (static, from the compile-cache key): MoE expert
+        capacity derives from this token count instead of the visible chunk
+        — the capacity-parity mode that makes chunked routing match
+        whole-prompt at capacity-bound loads."""
         lm = self.lm
         cfg = lm.cfg
         s = tokens.shape[1]
@@ -386,7 +441,8 @@ class Engine:
             x = x + _attend(spp["mixer"], qd, kv, sub, cfg, positions)
             # chunk tail padding is masked out of the MoE router
             x = sub_ffn_decode(spp, x, sub, cfg, self.plan,
-                               token_mask=chunk_mask)
+                               token_mask=chunk_mask,
+                               capacity_tokens=capacity_tokens)
             return x, nd, ns
 
         def state_sub(x, spp, sdsub, sssub, sub):
@@ -401,7 +457,8 @@ class Engine:
                                               cfg, st)
                 x = x + out
                 x = sub_ffn_decode(spp, x, sub, cfg, self.plan,
-                                   token_mask=chunk_mask)
+                                   token_mask=chunk_mask,
+                                   capacity_tokens=capacity_tokens)
             else:   # rwkv6
                 out, st1 = S.rwkv6_time_mix(spp["mixer"], h, sub.mixer, cfg,
                                             st)
@@ -472,7 +529,6 @@ class Engine:
     def _do_prefill(self, slot: int, st) -> None:
         plen = st.prompt_len
         t0 = self.trace.clock() if self.trace is not None else 0.0
-        chunks = self.sched.prefill_chunks(plen)
         table = jnp.asarray(self.sched.page_table)
         stateful = bool(self._state_keys)
         if stateful:
@@ -483,13 +539,46 @@ class Engine:
             # today — and the donated jit makes it an in-place scatter,
             # not a pool copy.
             self.spool = self._reset_state_jit(self.spool, jnp.int32(slot))
+        # MoE capacity-parity mode: every prefill shape of this request
+        # (whole or chunked) derives expert capacity from the full prompt
+        cap = plen if self.ecfg.moe_capacity_by_prompt else None
+        resume = st.prefix_len
+        if resume > 0:
+            # prefix-cache hit: positions < resume are already resident on
+            # shared pages (plus an optional COW-forked partial page whose
+            # int8 codes were copied verbatim). Adopt the donor's scales so
+            # those codes decode on their own grid, then compute only the
+            # suffix via the chunked path — exactly the numerics a cache-off
+            # engine with a chunk boundary at ``resume`` would produce.
+            if self.pcfg.quantized and st.prefix_scales is not None:
+                snap = {key: {n: jnp.asarray(v) for n, v in kinds.items()}
+                        for key, kinds in st.prefix_scales.items()}
+                self.pool = self._adopt_jit(self.pool, jnp.int32(slot), snap)
+            if st.fork is not None:
+                src, dst = st.fork
+                self.pool = self._fork_jit(self.pool, jnp.int32(src),
+                                           jnp.int32(dst))
+                self.metrics.cow_forked()
+                if self.trace is not None:
+                    self.trace.emit("cow_fork", rid=st.req.rid, slot=slot,
+                                    src_page=src, dst_page=dst,
+                                    tokens=resume % self.pcfg.page_size)
+            self.metrics.prefix_hit(resume, resume // self.pcfg.page_size)
+            if self.trace is not None:
+                self.trace.emit("cache_hit", rid=st.req.rid, slot=slot,
+                                hit_tokens=resume, prompt_len=plen)
+            c = self.ecfg.prefill_chunk
+            chunks = ([(s, min(s + c, plen)) for s in range(resume, plen, c)]
+                      if c > 0 else [(resume, plen)])
+        else:
+            chunks = self.sched.prefill_chunks(plen)
         last_logits = None
         for ci, (c0, c1) in enumerate(chunks):
             toks = st.req.prompt[c0:c1]
             if self.trace is not None and len(chunks) > 1:
                 self.trace.emit("prefill_chunk", rid=st.req.rid, slot=slot,
                                 start=c0, len=c1 - c0)
-            if ci == 0:
+            if ci == 0 and c0 == 0:
                 # whole-chunk model forward (exact reference numerics),
                 # then scatter the returned cache into the pools. Stateful
                 # archs run exact-length (a pad token would contaminate the
@@ -497,11 +586,12 @@ class Engine:
                 # padding applies to attention-only archs, masked out of
                 # MoE capacity via lm_forward's token_mask.
                 bucket = 0 if stateful else self.ecfg.prefill_bucket
-                pad = (-len(toks)) % bucket if bucket > 0 else 0
-                padded = toks + [0] * pad
+                padded = toks + [0] * (bucket_len(len(toks), bucket)
+                                       - len(toks))
                 tok_arr = jnp.asarray(padded, jnp.int32)[None]
-                last_logits, cache = self._prefill_jit(
-                    self.params, tok_arr, jnp.int32(len(toks)))
+                last_logits, cache = self._prefill_fns.get(
+                    (len(padded), cap))(self.params, tok_arr,
+                                        jnp.int32(len(toks)))
                 if self._attn_keys:
                     self.pool = self._write_prefill_jit(
                         self.pool, {k: cache[k] for k in self._attn_keys},
@@ -512,18 +602,32 @@ class Engine:
                         self.spool, {k: cache[k] for k in self._state_keys},
                         jnp.int32(slot), scfg=self.scfg)
             else:
-                width = self.ecfg.prefill_chunk
+                # later chunks — and the whole computed suffix of a prefix
+                # hit — go through the chunked step, padded to a stable
+                # width (the chunk size, or the bucketed suffix length when
+                # chunking is off) so compiled shapes stay bounded
+                if self.ecfg.prefill_chunk > 0:
+                    width = self.ecfg.prefill_chunk
+                else:
+                    width = bucket_len(len(toks), self.ecfg.prefill_bucket)
                 pad = 0 if stateful else (width - len(toks))
                 padded = toks + [0] * pad
                 tok_arr = jnp.asarray(padded, jnp.int32)[None]
-                last_logits, self.pool, self.spool = self._chunk_jit(
+                last_logits, self.pool, self.spool = self._chunk_fns.get(
+                    (len(padded), cap))(
                     self.params, self.pool, self.spool, tok_arr, table,
                     jnp.int32(slot), jnp.int32(c0), jnp.int32(len(toks)))
-        self.metrics.prefill(plen)
+        self.metrics.prefill(plen, computed=plen - resume)
         tok = int(self._sample(last_logits, [slot])[0])
         st.generated.append(tok)
         st.last_token = tok
         self.metrics.request_first_token(st.req.rid)
+        if self._prefix is not None:
+            # donate the fully-covered prompt pages to the radix tree so
+            # future requests can share them (codes + scales as written)
+            scales = (KC.snapshot_scales(self.pool, slot)
+                      if self.pcfg.quantized else None)
+            self.sched.commit_prefix(slot, scales)
         if self.trace is not None:
             self.trace.emit("prefill", rid=st.req.rid, slot=slot, len=plen,
                             dur=self.trace.clock() - t0)
@@ -637,4 +741,9 @@ class Engine:
         return dict(self._completions)
 
     def summary(self) -> dict:
+        # fold lazily-owned counters into the metrics before summarizing
+        if self._prefix is not None:
+            self.metrics.prefix_evictions = self._prefix.evictions
+        self.metrics.compile_evictions = (self._prefill_fns.evictions
+                                          + self._chunk_fns.evictions)
         return self.metrics.summary()

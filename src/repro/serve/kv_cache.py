@@ -27,6 +27,7 @@ from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..numerics import (QTensor, QuantSpec, get_codec,
                         per_tensor_max_scale_log2, qrange)
@@ -269,6 +270,77 @@ def write_chunk(data_l: jax.Array, scale_l: jax.Array, vals: jax.Array,
     else:
         vals = vals.astype(data_l.dtype)
     return data_l.at[pages, offs].set(vals), scale_l
+
+
+class PageRefs:
+    """Host-side reference counts over the pool's physical pages.
+
+    A page's count is the number of *readers* currently holding it mapped
+    or reserved: every slot that acquired the page as a shared prefix page,
+    plus the slot (if any) that reserved it as a COW-fork source.  Tree
+    ownership itself (``serve/prefix.py``) is NOT a reference — a cached
+    page with no live readers has count 0 and is evictable.  The allocator
+    free list and this table are disjoint by construction: pages are handed
+    to the refcount world only while allocated."""
+
+    def __init__(self, num_pages: int):
+        self._refs = np.zeros(num_pages, np.int32)
+
+    def acquire(self, pages: list[int]) -> None:
+        for p in pages:
+            self._refs[p] += 1
+
+    def release(self, pages: list[int]) -> None:
+        for p in pages:
+            self._refs[p] -= 1
+            if self._refs[p] < 0:
+                raise AssertionError(f"page {p} released below zero")
+
+    def count(self, page: int) -> int:
+        return int(self._refs[page])
+
+    def unreferenced(self, pages: list[int]) -> bool:
+        return all(self._refs[p] == 0 for p in pages)
+
+
+def fork_page(pool: dict, src: jax.Array, dst: jax.Array) -> dict:
+    """Copy-on-write page copy: duplicate physical page ``src`` into ``dst``
+    for every cached tensor of every layer, codes (or fp values) verbatim.
+
+    No dequant/requant round-trip happens — int8 codes are moved bit-exactly,
+    so a forked page is indistinguishable from the donor's up to the fork
+    point.  The reader's slot scale must be adopted from the donor's
+    (``adopt_scales``) for those codes to decode to the donor's values."""
+    data = dict(pool["data"])
+    for key, kinds in data.items():
+        new_d = dict(kinds)
+        for name, arr in kinds.items():
+            new_d[name] = arr.at[:, dst].set(arr[:, src])
+        data[key] = new_d
+    return {"data": data, "scale_log2": pool["scale_log2"]}
+
+
+def snapshot_scales(pool: dict, slot: int) -> dict:
+    """Host-side copy of one slot's per-layer scales: {key: {name: (L,) np}}.
+    Taken after prefill so the prefix tree can hand the same decode grid to
+    every future reader of the inserted pages."""
+    return {key: {name: np.asarray(arr[:, slot])
+                  for name, arr in kinds.items()}
+            for key, kinds in pool["scale_log2"].items()}
+
+
+def adopt_scales(pool: dict, slot: jax.Array, snap: dict) -> dict:
+    """Set one slot's scale rows from a prefix node's snapshot (leaves (L,)).
+    Shared int8 pages then decode under the exact grid they were written
+    with; the reader's own suffix chunks and decode appends clip into it —
+    the same contract chunked prefill already obeys."""
+    scale = dict(pool["scale_log2"])
+    for key, kinds in snap.items():
+        new_s = dict(scale[key])
+        for name, vals in kinds.items():
+            new_s[name] = new_s[name].at[:, slot].set(vals)
+        scale[key] = new_s
+    return {"data": pool["data"], "scale_log2": scale}
 
 
 def write_prefill(pool: dict, cache: dict, table_row: jax.Array,

@@ -65,8 +65,19 @@ class ServeMetrics:
     _t_end: float | None = None
     decode_steps: int = 0
     decode_tokens: int = 0      # tokens produced by batched decode steps
-    prefill_tokens: int = 0
+    prefill_tokens: int = 0     # prompt tokens actually COMPUTED by prefill
+    prompt_tokens: int = 0      # prompt tokens submitted through prefill
+                                # (computed + prefix-cache hits); equals
+                                # prefill_tokens when no cache is attached
     preemptions: int = 0
+    # prefix-cache counters (serve/prefix.py; engine-maintained)
+    prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
+    cow_forks: int = 0          # copy-on-write page copies (mid-page hits)
+    prefix_evictions: int = 0   # LRU leaf evictions under page pressure
+    pages_saved: int = 0        # physical pages NOT allocated thanks to
+                                # sharing (sum of shared spans at admission)
+    compile_evictions: int = 0  # jitted prefill shapes dropped by the
+                                # bounded compile cache (serve/bucketing.py)
     num_slots: int = 0          # pool width (set by the engine; 0: unknown)
     cache_bytes: int = 0        # resident KV pool bytes (set by the engine)
     cache_bytes_fp32: int = 0   # what the same pool would cost unquantized
@@ -117,8 +128,19 @@ class ServeMetrics:
             "t": self.clock(), "step": self.decode_steps,
             "n_active": n_active, "free_pages": free_pages, "dur": dur})
 
-    def prefill(self, n_tokens: int) -> None:
-        self.prefill_tokens += n_tokens
+    def prefill(self, n_tokens: int, computed: int | None = None) -> None:
+        """One request prefilled: ``n_tokens`` prompt positions, of which
+        ``computed`` were actually run through the model (the rest were
+        served from the prefix cache; default: all of them)."""
+        self.prompt_tokens += n_tokens
+        self.prefill_tokens += n_tokens if computed is None else computed
+
+    def prefix_hit(self, hit_tokens: int, pages: int) -> None:
+        self.prefix_hit_tokens += hit_tokens
+        self.pages_saved += pages
+
+    def cow_forked(self) -> None:
+        self.cow_forks += 1
 
     def preempted(self) -> None:
         self.preemptions += 1
@@ -160,11 +182,22 @@ class ServeMetrics:
             "requests_completed": len(done),
             "generated_tokens": total_gen,
             "prefill_tokens": self.prefill_tokens,
+            "prompt_tokens": self.prompt_tokens,
             "decode_steps": self.decode_steps,
             "preemptions": self.preemptions,
+            # prefix cache: hit rate over submitted prompt tokens, plus the
+            # raw counters (PR 6 span schema: flat keys, JSON scalars)
+            "prefix_hit_tokens": self.prefix_hit_tokens,
+            "prefix_hit_rate": (self.prefix_hit_tokens / self.prompt_tokens
+                                if self.prompt_tokens else 0.0),
+            "cow_forks": self.cow_forks,
+            "prefix_evictions": self.prefix_evictions,
+            "pages_saved": self.pages_saved,
+            "compile_evictions": self.compile_evictions,
             "wall_s": wall,
             "tokens_per_s": total_gen / wall if wall > 0 else 0.0,
             "ttft_p50_s": _pct(ttft, 50), "ttft_p95_s": _pct(ttft, 95),
+            "ttft_p99_s": _pct(ttft, 99),
             "ttft_queue_p50_s": _pct(ttft_queue, 50),
             "ttft_compute_p50_s": _pct(ttft_compute, 50),
             "latency_p50_s": _pct(lat, 50), "latency_p95_s": _pct(lat, 95),

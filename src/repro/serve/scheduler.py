@@ -46,6 +46,14 @@ class SlotState:
     prompt_len: int
     generated: list[int] = field(default_factory=list)
     last_token: int = -1
+    # prefix-cache admission outcome (serve/prefix.py): positions below
+    # ``prefix_len`` are already resident (shared pages + an optional COW
+    # fork) and prefill resumes there.  ``fork`` is the pending (src, dst)
+    # page copy the engine must perform before the first suffix chunk;
+    # ``prefix_scales`` the matched node's scale snapshot to adopt.
+    prefix_len: int = 0
+    fork: tuple[int, int] | None = None
+    prefix_scales: dict | None = None
 
     @property
     def cur_len(self) -> int:
@@ -94,15 +102,25 @@ class Scheduler:
     re-prefill on re-admission)."""
 
     def __init__(self, pcfg: PoolConfig, prefill_chunk: int = 0,
-                 paged: bool = True, trace=None):
+                 paged: bool = True, trace=None, prefix=None):
         self.pcfg = pcfg
         self.prefill_chunk = prefill_chunk
         self.paged = paged
         self.trace = trace      # optional obs.TraceRecorder (page events)
+        self.prefix = prefix    # optional serve.prefix.RadixPrefixCache
+        if prefix is not None and not paged:
+            raise ValueError("prefix cache requires the paged pool")
         self.queue: deque[Request] = deque()
         self.slots: list[SlotState | None] = [None] * pcfg.num_slots
         self.alloc = PageAllocator(pcfg.total_pages)
+        # slot_pages: pages PRIVATE to the slot (freed at retire).
+        # slot_shared: tree-owned pages mapped in the slot's row (stay in the
+        # prefix cache at retire).  slot_refs: pages this slot holds refcounts
+        # on (shared pages + a pending COW-fork source) — released at retire.
         self.slot_pages: list[list[int]] = [[] for _ in range(pcfg.num_slots)]
+        self.slot_shared: list[list[int]] = [[] for _ in
+                                             range(pcfg.num_slots)]
+        self.slot_refs: list[list[int]] = [[] for _ in range(pcfg.num_slots)]
         # device-facing page table; unmapped entries point at the trash page
         self.page_table = np.full((pcfg.num_slots, pcfg.pages_per_slot),
                                   pcfg.trash_page, np.int32)
@@ -132,8 +150,28 @@ class Scheduler:
         self.queue.append(req)
         return req.rid
 
+    def alloc_pages(self, n: int) -> list[int] | None:
+        """Allocate ``n`` pages, evicting cold prefix-cache leaves first if
+        the free list alone cannot cover it.  Eviction only ever reclaims
+        refcount-0 spans, so pages mapped (or matched-and-acquired) by any
+        live slot are untouchable — running requests are reclaimed by
+        *preemption*, never by cache eviction."""
+        got = self.alloc.alloc(n)
+        if got is None and self.prefix is not None:
+            freed = self.prefix.evict(n - self.alloc.free_pages)
+            if freed:
+                self.alloc.free(freed)
+                got = self.alloc.alloc(n)
+        return got
+
     def try_admit(self) -> tuple[int, SlotState] | None:
-        """Admit the head-of-queue request if a slot + pages are available."""
+        """Admit the head-of-queue request if a slot + pages are available.
+
+        With a prefix cache, the longest cached prefix is matched first and
+        its pages acquired (refcounted) *before* the private-page
+        allocation, so eviction triggered by that very allocation can never
+        free the matched span.  Only the non-cached remainder of the prompt
+        needs fresh pages; prefill will resume at ``st.prefix_len``."""
         if not self.queue:
             return None
         free_slots = [i for i, s in enumerate(self.slots) if s is None]
@@ -142,21 +180,65 @@ class Scheduler:
         req = self.queue[0]
         # reserve the prompt's pages plus one decode page up front
         pages: list[int] = []
+        shared: list[int] = []
+        refs: list[int] = []
+        m = None
         if self.paged:
-            need = self.pcfg.pages_for(len(req.prompt) + 1)
-            got = self.alloc.alloc(need)
+            if self.prefix is not None:
+                m = self.prefix.match(req.prompt)
+            if m is not None:
+                self.prefix.acquire(m)
+                shared = list(m.shared_pages)
+                refs = shared + ([m.fork_src] if m.fork_src is not None
+                                 else [])
+            need = self.pcfg.pages_for(len(req.prompt) + 1) - len(shared)
+            got = self.alloc_pages(need)
             if got is None:
+                if refs:
+                    self.prefix.release(refs)
                 return None
             pages = got
         self.queue.popleft()
         slot = free_slots[0]
         self.slot_pages[slot] = pages
-        if pages:
-            self.page_table[slot, :len(pages)] = pages
+        self.slot_shared[slot] = shared
+        self.slot_refs[slot] = refs
+        row = shared + pages
+        if row:
+            self.page_table[slot, :len(row)] = row
         st = SlotState(req, prompt_len=len(req.prompt))
+        if m is not None:
+            st.prefix_len = m.resume
+            st.prefix_scales = m.scales
+            if m.fork_src is not None:
+                # the first private page sits right after the shared span —
+                # it is the COW destination the engine copies into
+                st.fork = (m.fork_src, pages[0])
         self.slots[slot] = st
         self.admission_order.append(slot)
         return slot, st
+
+    def commit_prefix(self, slot: int, scales: dict | None) -> list[int]:
+        """After prefill: donate the slot's fully-prompt-covered private
+        pages to the prefix tree.  Donated pages move from the private list
+        (freed at retire) to the acquired-shared lists (refs released at
+        retire), so retirement stays symmetric.  Returns donated pages."""
+        if self.prefix is None:
+            return []
+        st = self.slots[slot]
+        ps = self.pcfg.page_size
+        n_full = st.prompt_len // ps
+        if n_full <= len(self.slot_shared[slot]):
+            return []       # nothing beyond the already-shared span
+        row = self.slot_shared[slot] + self.slot_pages[slot]
+        donated = self.prefix.insert(st.req.prompt, row[:n_full], scales)
+        for p in donated:
+            self.slot_pages[slot].remove(p)
+        if donated:
+            self.prefix.refs.acquire(donated)
+            self.slot_refs[slot].extend(donated)
+            self.slot_shared[slot].extend(donated)
+        return donated
 
     def prefill_chunks(self, prompt_len: int) -> list[tuple[int, int]]:
         """(start, end) chunks covering the prompt."""
@@ -173,9 +255,9 @@ class Scheduler:
             return True
         st = self.slots[slot]
         page_idx = st.next_pos // self.pcfg.page_size
-        if page_idx < len(self.slot_pages[slot]):
+        if page_idx < len(self.slot_shared[slot]) + len(self.slot_pages[slot]):
             return True
-        pages = self.alloc.alloc(1)
+        pages = self.alloc_pages(1)
         if pages is None:
             return False
         self.slot_pages[slot].append(pages[0])
@@ -191,7 +273,13 @@ class Scheduler:
             self.trace.emit("page_free", slot=slot,
                             n=len(self.slot_pages[slot]))
         self.alloc.free(self.slot_pages[slot])
+        if self.slot_refs[slot]:
+            # shared/acquired pages stay in the prefix tree; dropping the
+            # refs merely makes them evictable once no other reader remains
+            self.prefix.release(self.slot_refs[slot])
         self.slot_pages[slot] = []
+        self.slot_shared[slot] = []
+        self.slot_refs[slot] = []
         self.page_table[slot, :] = self.pcfg.trash_page
         self.slots[slot] = None
         self.admission_order.remove(slot)

@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.serve import kv_cache as KC
 from repro.serve.kv_cache import PoolConfig
+from repro.serve.prefix import RadixPrefixCache
 from repro.serve.scheduler import Request, Scheduler
 
 
@@ -140,3 +141,186 @@ def run_pool_walk(seed: int, steps: int = 40) -> None:
         _check_accounting(sched, pcfg)
         _check_read_isolation(sched, pcfg, data, scale, extent)
     _check_write_isolation(sched, pcfg, data, scale)
+
+
+# ---------------------------------------------------------------------------
+# Prefix-sharing walker (serve/prefix.py): refcount / COW invariants
+# ---------------------------------------------------------------------------
+#
+# With sharing, ``run_pool_walk``'s invariants change shape: slot page sets
+# are no longer pairwise disjoint (that's the point), and per-request
+# sentinels no longer work (a shared page holds the DONOR's writes).  The
+# prefix walker instead writes token-derived values — value(position) is a
+# pure function of the token at that position — so a cache hit must read
+# exactly what a recompute would have written, and asserts:
+#
+# - **refcount truth**: every page's refcount equals the number of live
+#   slots holding it acquired (shared span + COW-fork source + donated);
+# - **ownership partition**: free list, tree-owned pages, and slots'
+#   private pages are pairwise disjoint; each slot's shared list is
+#   tree-owned; page-table rows map only the slot's own shared/private
+#   pages or trash;
+# - **shared pages never written through**: every tree-owned page's bytes
+#   equal its snapshot taken at insertion, after every op;
+# - **fork bit-exactness**: a COW copy equals the source page's snapshot
+#   verbatim before the divergent suffix overwrites it;
+# - **read correctness**: a slot's gathered view equals the token-derived
+#   expectation over every written position (hit or miss path alike).
+
+
+def _tok_val(tok: int) -> float:
+    return float(tok + 1)
+
+
+def _check_prefix_invariants(sched, prefix, pcfg, data, tree_content,
+                             expected) -> None:
+    owned = prefix.owned_pages
+    # snapshots track ownership exactly
+    assert set(tree_content) == owned, (set(tree_content), owned)
+    # refcount truth
+    held = []
+    for refs in sched.slot_refs:
+        held.extend(refs)
+    for p in range(pcfg.total_pages):
+        assert prefix.refs.count(p) == held.count(p), (
+            p, prefix.refs.count(p), held.count(p))
+    # ownership partition
+    free = set(sched.alloc._free)
+    priv = [set(p) for p in sched.slot_pages]
+    for i in range(len(priv)):
+        for j in range(i + 1, len(priv)):
+            assert not (priv[i] & priv[j]), (i, j, priv)
+    all_priv = set().union(*priv) if priv else set()
+    assert not (free & all_priv), (free, all_priv)
+    assert not (free & owned), (free, owned)
+    assert not (all_priv & owned), (all_priv, owned)
+    arr = np.asarray(data)
+    for s in range(pcfg.num_slots):
+        shared = set(sched.slot_shared[s])
+        assert shared <= owned, (s, shared, owned)
+        row = set(int(p) for p in sched.page_table[s])
+        assert row <= shared | priv[s] | {pcfg.trash_page}, (s, row)
+    # shared pages never written through
+    for p in owned:
+        np.testing.assert_array_equal(arr[p], tree_content[p], err_msg=f"{p}")
+    # read correctness (token-derived expectation)
+    view = np.asarray(KC.gather_slots(
+        data, jnp.zeros((pcfg.num_slots,), jnp.float32),
+        jnp.asarray(sched.page_table), pcfg, jnp.float32))
+    for s, st in enumerate(sched.slots):
+        if st is None:
+            continue
+        want = expected[s]
+        got = view[s, :len(want), 0]
+        assert (got == np.asarray(want)).all(), (s, got, want)
+
+
+def run_prefix_walk(seed: int, steps: int = 40) -> None:
+    rng = np.random.RandomState(seed)
+    pcfg = PoolConfig(num_slots=3, page_size=4, pages_per_slot=4,
+                      num_pages=int(rng.choice([8, 10, 12])),
+                      quantized=False)
+    prefix = RadixPrefixCache(pcfg.page_size, pcfg.total_pages)
+    sched = Scheduler(pcfg, prefix=prefix)
+    data = jnp.zeros((pcfg.total_pages + 1, pcfg.page_size, 1), jnp.float32)
+    scale = jnp.zeros((pcfg.num_slots,), jnp.float32)
+    tree_content: dict[int, np.ndarray] = {}    # page -> insertion snapshot
+    expected: list[list[float]] = [[] for _ in range(pcfg.num_slots)]
+
+    # a small base-prefix pool makes shared prefixes (and mid-page
+    # divergences) likely; tokens are small ints, values derive from them
+    bases = [rng.randint(1, 10, 8).tolist() for _ in range(3)]
+
+    def make_prompt():
+        base = bases[int(rng.randint(len(bases)))]
+        keep = int(rng.randint(1, len(base) + 1))
+        tail = rng.randint(1, 10, int(rng.randint(0, 4))).tolist()
+        prompt = base[:keep] + tail
+        return prompt[:pcfg.max_len - 6]
+
+    def retire_done(slot):
+        if sched.slots[slot] is not None and sched.slots[slot].done():
+            sched.retire(slot)
+            expected[slot] = []
+
+    def check():
+        # eviction (inside alloc_pages, under pressure) un-owns pages; their
+        # snapshots retire with them — but a page may never leave the tree
+        # while still snapshotted-as-owned un-freed (assert superset first)
+        assert prefix.owned_pages <= set(tree_content)
+        for p in list(tree_content):
+            if p not in prefix.owned_pages:
+                del tree_content[p]
+        _check_prefix_invariants(sched, prefix, pcfg, data, tree_content,
+                                 expected)
+
+    for _ in range(steps):
+        op = rng.choice(["submit", "admit", "decode", "retire", "preempt"])
+        if op == "submit" and len(sched.queue) < 4:
+            sched.submit(Request(prompt=make_prompt(),
+                                 max_new_tokens=int(rng.randint(1, 6))))
+        elif op == "admit":
+            adm = sched.try_admit()
+            if adm is not None:
+                slot, st = adm
+                resume = st.prefix_len
+                if st.fork is not None:
+                    src, dst = st.fork
+                    data = data.at[dst].set(data[src])
+                    # fork carries the source page verbatim
+                    np.testing.assert_array_equal(np.asarray(data)[dst],
+                                                  tree_content[src])
+                # prefill computes only the suffix (the engine's hit path)
+                toks = st.req.prompt[resume:]
+                vals = jnp.asarray([[_tok_val(t)] for t in toks], jnp.float32)
+                data, scale = KC.write_chunk(
+                    data, scale, vals,
+                    jnp.asarray(sched.page_table[slot]), jnp.int32(resume),
+                    jnp.int32(len(toks)), jnp.int32(slot), pcfg)
+                expected[slot] = [_tok_val(t) for t in st.req.prompt]
+                donated = sched.commit_prefix(slot, None)
+                arr = np.asarray(data)
+                for p in donated:
+                    tree_content[p] = arr[p].copy()
+                st.generated.append(7)
+                st.last_token = 7
+                retire_done(slot)
+        elif op == "decode":
+            for slot in range(pcfg.num_slots):
+                if sched.slots[slot] is None:
+                    continue
+                while not sched.ensure_page(slot):
+                    evicted = sched.preempt_youngest()
+                    assert evicted is not None, "pool exhausted"
+                    expected[evicted] = []
+                    if evicted == slot:
+                        break
+            active = sched.active_mask()
+            if not active.any():
+                continue
+            new = jnp.asarray([[[_tok_val(s.last_token) if s else 0.0]]
+                               for s in sched.slots], jnp.float32)
+            data = KC.append_token(
+                data, scale, new, jnp.asarray(sched.page_table),
+                jnp.asarray(sched.lens_vector()), jnp.asarray(active), pcfg)
+            for slot, st in enumerate(sched.slots):
+                if st is None:
+                    continue
+                expected[slot].append(_tok_val(st.last_token))
+                st.generated.append(7)
+                st.last_token = 7
+                retire_done(slot)
+        elif op == "retire":
+            live = [i for i, s in enumerate(sched.slots) if s is not None]
+            if live:
+                slot = int(rng.choice(live))
+                sched.retire(slot)      # early EOS
+                expected[slot] = []
+        elif op == "preempt":
+            evicted = sched.preempt_youngest()
+            if evicted is not None:
+                expected[evicted] = []
+
+        check()
+    # the walk must actually exercise sharing on most seeds; eviction runs
+    # opportunistically (alloc_pages under pressure), covered by num_pages=8

@@ -93,6 +93,19 @@ def test_paged_pool_slot_isolation(seed, steps):
     run_pool_walk(seed, steps)
 
 
+@given(st.integers(0, 2 ** 31 - 1), st.integers(10, 60))
+def test_prefix_cache_sharing_invariants(seed, steps):
+    """Random walks over a prefix-cache-enabled scheduler preserve the
+    sharing invariants: page refcounts equal the live-reader count, shared
+    (tree-owned) pages are never written through after insertion, COW forks
+    carry the source page bit-exactly, ownership partitions (free list /
+    tree / private) stay disjoint, and every slot's gathered view equals
+    the token-derived expectation whether it prefilled or hit the cache
+    (see tests/pool_walk.py::run_prefix_walk)."""
+    from pool_walk import run_prefix_walk
+    run_prefix_walk(seed, steps)
+
+
 @given(st.integers(1, 64), st.integers(1, 8), st.integers(0, 2 ** 31 - 1))
 def test_scale_manager_monotone_response(n, k, seed):
     """Scaling the input up never decreases the chosen exponent."""
