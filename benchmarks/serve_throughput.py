@@ -25,6 +25,8 @@ state-byte reduction acceptance measurement — into ``BENCH_ssm_serve.json``.
         --out BENCH_paged_attn.json
     PYTHONPATH=src python benchmarks/serve_throughput.py --ssm \
         --arch rwkv6-1.6b --out BENCH_ssm_serve.json
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+        python benchmarks/serve_throughput.py --mesh 1x8
 """
 from __future__ import annotations
 
@@ -35,6 +37,17 @@ import time
 
 import jax
 import numpy as np
+
+
+def plan_for(mesh: str | None):
+    """``DxM`` -> a TP ShardPlan on a (data, model) dev mesh (shards the
+    paged pool over KV heads and params per the plan); None/"" -> the
+    mesh-less single-device plan."""
+    from repro.sharding import ShardPlan, make_plan
+    if not mesh:
+        return ShardPlan(mesh=None)
+    d, m = (int(x) for x in mesh.split("x"))
+    return make_plan(jax.make_mesh((d, m), ("data", "model")), "tp")
 
 
 def bench_cell(lm, params, plan, *, slots: int, quantized: bool,
@@ -93,15 +106,14 @@ def bench_cell(lm, params, plan, *, slots: int, quantized: bool,
 
 def run_sweep(arch: str, slots_list: list[int], requests: int,
               prompt_len: int, gen_len: int, page_size: int,
-              trace=None, health: bool = False) -> dict:
+              trace=None, health: bool = False, mesh: str = "") -> dict:
     import repro.configs as C
     from repro.models import build_lm, init_lm
-    from repro.sharding import ShardPlan
 
     cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
     lm = build_lm(cfg)
     params = init_lm(jax.random.PRNGKey(0), lm)
-    plan = ShardPlan(mesh=None)
+    plan = plan_for(mesh)
     cells = []
     for slots in slots_list:
         for quantized in (False, True):
@@ -115,7 +127,8 @@ def run_sweep(arch: str, slots_list: list[int], requests: int,
                   file=sys.stderr)
     return {"bench": "serve_throughput", "arch": arch,
             "prompt_len": prompt_len, "gen_len": gen_len,
-            "page_size": page_size, "cells": cells}
+            "page_size": page_size, "mesh": mesh or "1",
+            "cells": cells}
 
 
 def _decode_timer(lm, params, plan, *, fused: bool, ctx: int, slots: int,
@@ -205,17 +218,16 @@ def modeled_kv_bytes(lm, *, ctx: int, slots: int, quantized: bool) -> dict:
 
 
 def run_fused_sweep(arch: str, ctxs: list[int], slots: int, page_size: int,
-                    quantized: bool, steps: int) -> dict:
+                    quantized: bool, steps: int, mesh: str = "") -> dict:
     import repro.configs as C
     from repro.models import build_lm, init_lm
     from repro.numerics.pallas_backend import interpret_mode as _interpret
     from repro.numerics.pallas_backend import native_backend as _native
-    from repro.sharding import ShardPlan
 
     cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
     lm = build_lm(cfg)
     params = init_lm(jax.random.PRNGKey(0), lm)
-    plan = ShardPlan(mesh=None)
+    plan = plan_for(mesh)
     cells, speedup, modeled = [], {}, {}
     for ctx in ctxs:
         pair_cells = bench_decode_pair(
@@ -389,6 +401,13 @@ def main() -> None:
                          "alloc-free) to this JSONL and switch on the "
                          "quant-health aggregates for int8 cells; the BENCH "
                          "doc grows a 'telemetry' key")
+    ap.add_argument("--mesh", default="",
+                    help="DxM (data, model) dev mesh for the default and "
+                         "--fused sweeps — runs the engine on the TP plan "
+                         "(KV pool sharded over KV heads). Needs D*M "
+                         "devices, e.g. XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=8 "
+                         "--mesh 1x8 on CPU")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -413,11 +432,13 @@ def main() -> None:
         page = args.page_size or (8 if args.smoke else 16)
         doc = run_fused_sweep(args.arch, ctxs, slots=args.slots[0],
                               page_size=page,
-                              quantized=not args.fp_pool, steps=steps)
+                              quantized=not args.fp_pool, steps=steps,
+                              mesh=args.mesh)
     else:
         doc = run_sweep(args.arch, args.slots, args.requests,
                         args.prompt_len, args.gen_len, args.page_size or 8,
-                        trace=trace, health=trace is not None)
+                        trace=trace, health=trace is not None,
+                        mesh=args.mesh)
     if trace is not None:
         from repro.numerics.pallas_backend import fallback_count
         from repro.obs import kernel_costs, write_jsonl

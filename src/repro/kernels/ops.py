@@ -139,36 +139,10 @@ def quantize_fused(x: jax.Array, step_log2: jax.Array, bits: int) -> jax.Array:
                           backend="pallas")
 
 
-def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
-                    kscale: jax.Array, vscale: jax.Array, table: jax.Array,
-                    lens: jax.Array, *, page_size: int, quantized: bool,
-                    impl: str = "auto",
-                    page_chunk: int | None = None) -> jax.Array:
-    """Fused paged-attention decode: per-page int8 dequant + online-softmax
-    attention over each slot's page list (never materializes the fp32 slot
-    view). See ``kernels/paged_attention.py`` for layouts.
-
-    impl: "pallas" (the kernel; compiled on TPU, interpret elsewhere),
-    "jnp" (the same dataflow as a page-scan in XLA), or "auto" — the kernel
-    on TPU (or when JAX_PALLAS_INTERPRET=1 asks for kernel validation), the
-    jnp page-scan on other backends where interpret-mode grid iteration
-    would serialize the hot loop.
-
-    page_chunk (jnp impl only): pages folded per online-softmax step.
-    1 is bit-locked to the kernel's update order; None picks ~256 tokens
-    per step to amortize dispatch overhead off-TPU.
-    """
-    if impl == "auto":
-        impl = "pallas" if native_backend() else "jnp"
-    # bytes actually touched by the page walk: the whole pool row array is
-    # an operand, but only each slot's mapped pages move — model the table-
-    # addressable footprint (B * pages_per_slot pages) plus q in and out
-    pages_touched = table.shape[0] * table.shape[1]
-    page_bytes = (int(np.prod(kdata.shape[1:])) + int(np.prod(vdata.shape[1:]))
-                  ) * jnp.dtype(kdata.dtype).itemsize
-    record_kernel_call(f"paged_attention.{impl}",
-                       bytes_moved=pages_touched * page_bytes
-                       + 2 * _nbytes(q))
+def _paged_attention_dispatch(q, kdata, vdata, kscale, vscale, table, lens,
+                              *, page_size, quantized, impl, page_chunk):
+    """impl-resolved page walk on whatever head slice it is handed — the
+    whole pool, or one device's head shard under ``shard_map``."""
     if impl == "pallas":
         with jax.named_scope("repro.ops.paged_attention"):
             return PA.paged_attention_kernel(
@@ -184,6 +158,65 @@ def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
                 page_size=page_size, quantized=quantized,
                 page_chunk=page_chunk)
     raise ValueError(f"unknown paged_attention impl {impl!r}")
+
+
+def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
+                    kscale: jax.Array, vscale: jax.Array, table: jax.Array,
+                    lens: jax.Array, *, page_size: int, quantized: bool,
+                    impl: str = "auto", page_chunk: int | None = None,
+                    plan=None) -> jax.Array:
+    """Fused paged-attention decode: per-page int8 dequant + online-softmax
+    attention over each slot's page list (never materializes the fp32 slot
+    view). See ``kernels/paged_attention.py`` for layouts.
+
+    impl: "pallas" (the kernel; compiled on TPU, interpret elsewhere),
+    "jnp" (the same dataflow as a page-scan in XLA), or "auto" — the kernel
+    on TPU (or when JAX_PALLAS_INTERPRET=1 asks for kernel validation), the
+    jnp page-scan on other backends where interpret-mode grid iteration
+    would serialize the hot loop.
+
+    page_chunk (jnp impl only): pages folded per online-softmax step.
+    1 is bit-locked to the kernel's update order; None picks ~256 tokens
+    per step to amortize dispatch overhead off-TPU.
+
+    plan (``sharding.ShardPlan``): when its mesh shards the pool's KV-head
+    axis over ``model`` (``plan.shards_kv_heads``), the walk runs inside a
+    ``shard_map`` — each device walks its local head shard of the pages
+    with its local q heads and no collective at all (GQA query heads group
+    contiguously per KV head, so shard-local attention is exact; the per-
+    slot scales/table/lens are replicated operands). Numerics are those of
+    the unsharded walk on each head slice — identical update order per
+    head, so decode stays token-identical to single-device.
+    """
+    if impl == "auto":
+        impl = "pallas" if native_backend() else "jnp"
+    # bytes actually touched by the page walk: the whole pool row array is
+    # an operand, but only each slot's mapped pages move — model the table-
+    # addressable footprint (B * pages_per_slot pages) plus q in and out
+    pages_touched = table.shape[0] * table.shape[1]
+    page_bytes = (int(np.prod(kdata.shape[1:])) + int(np.prod(vdata.shape[1:]))
+                  ) * jnp.dtype(kdata.dtype).itemsize
+    record_kernel_call(f"paged_attention.{impl}",
+                       bytes_moved=pages_touched * page_bytes
+                       + 2 * _nbytes(q))
+    f = functools.partial(_paged_attention_dispatch, page_size=page_size,
+                          quantized=quantized, impl=impl,
+                          page_chunk=page_chunk)
+    hkv = kdata.shape[2]
+    if plan is not None and plan.shards_kv_heads(hkv) \
+            and q.shape[1] % hkv == 0:
+        from jax.sharding import PartitionSpec as P
+
+        from ..sharding import compat_shard_map
+        f = compat_shard_map(
+            f, plan.mesh,
+            in_specs=(P(None, "model", None),          # q (B, Hq, Dh)
+                      P(None, None, "model", None),    # k pages
+                      P(None, None, "model", None),    # v pages
+                      P(None), P(None),                # per-slot scales
+                      P(None, None), P(None)),         # table, lens
+            out_specs=P(None, "model", None))
+    return f(q, kdata, vdata, kscale, vscale, table, lens)
 
 
 def ttm_matvec_kernels(cores, x, spec):

@@ -37,6 +37,15 @@ gqa_attend``, evaluated in f32 with an online (per-page) softmax instead of
 a full-T one.  Greedy decode is token-identical to the gather path; logits
 agree to float-roundoff (asserted differentially).
 
+Head-sharding contract: every head is independent (GQA groups the query
+heads contiguously per KV head), so when the pool's KV-head axis is sharded
+over the ``model`` mesh axis (``ShardPlan.shards_kv_heads``) the dispatcher
+in ``ops.paged_attention`` shard_maps this walk — each device runs the
+SAME kernel on its local head slice with zero collectives, and the
+numerics above hold per shard unchanged.  Nothing in this module is
+mesh-aware; the table/lens operands are replicated and page ids are global
+(the page axis is never sharded).
+
 Layouts (one attention sublayer, one layer of the scanned stack):
 
 - q:        (B, Hq, Dh)   f32 — one decode query per slot

@@ -22,6 +22,14 @@ def make_dev_mesh(data: int = 1, model: int = 1):
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_dp_mesh(data: int = 0):
+    """1-D data-parallel mesh (``("data",)``) over ``data`` devices (0 =>
+    all local devices) — the dp-only mesh ``steps.make_dp_train_step``
+    expects (no ``model`` axis at all; the plan's activation/param helpers
+    fall back to replication for the absent axis)."""
+    return jax.make_mesh((data or len(jax.devices()),), ("data",))
+
+
 # TPU v5e hardware constants (roofline denominators)
 PEAK_FLOPS_BF16 = 197e12      # per chip
 HBM_BW = 819e9                # bytes/s per chip

@@ -196,6 +196,125 @@ def make_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
     return train_step
 
 
+def init_dp_train_state(params, tcfg: TrainConfig, plan: ShardPlan,
+                        policy: NumericsPolicy | None = None) -> TrainState:
+    """TrainState for ``make_dp_train_step``: residual leaves carry a
+    leading ``(dp_size,)`` replica axis — each data-parallel replica keeps
+    its own error-feedback residual (it quantized its own local gradient),
+    while params/opt/scales stay replicated (the wire's summed codes are
+    bitwise identical on every replica)."""
+    st = init_train_state(params, tcfg, policy)
+    if st.residual is not None:
+        n = plan.dp_size()
+        st = st._replace(residual=tuple(
+            None if r is None else jnp.zeros((n,) + r.shape, r.dtype)
+            for r in st.residual))
+    return st
+
+
+def make_dp_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig):
+    """Data-parallel ``shard_map`` train step whose ONLY payload-sized
+    collective is the int8 gradient wire (``optim.grad_compress.psum_int8``,
+    PR 5) — the explicit-collective realization of the paper's low-precision
+    training story at the cluster level.
+
+    The plan's mesh must be dp-only (every axis in ``plan.dp_axes`` — e.g.
+    the 1-D ``("data",)`` mesh): inside the body each replica holds the full
+    (replicated) params and its batch shard, runs the mesh-less forward/
+    backward locally, and reduces gradients through ``psum_int8_tree`` —
+    blockwise pmax scales (payload/1024 f32 elements) + int8 codes on an
+    ``all_gather``, summed in a widened int32 accumulator. Everything after
+    the wire (grad_edge quantizer, clipping, adam, lambda update) is local
+    arithmetic on bitwise-replicated values, so no f32 gradient, parameter,
+    or optimizer tensor ever crosses a collective; the only other
+    collectives are scalar ``pmean``s of loss/metrics/activation stats.
+    tests/test_distributed.py walks the jaxpr and asserts exactly this.
+
+    State convention: ``init_dp_train_state`` (residual leaves lead with a
+    ``(dp_size,)`` replica axis, sharded over the dp axes; everything else
+    replicated). Batch leaves shard their leading (batch) dim.
+
+    Numerics contract vs ``make_train_step`` (the mesh-less path): identical
+    forward/backward math; the wire replaces ``compress_decompress`` — same
+    blockwise int8 grid, with the block scale chosen by cross-replica pmax
+    instead of locally, i.e. exactly the PR 5 ``psum_int8`` semantics the
+    ``wire`` test pins bitwise.
+    """
+    if plan.mesh is None:
+        raise ValueError("make_dp_train_step needs a plan with a real mesh")
+    extra = [a for a in plan.mesh.shape if a not in plan.dp_axes]
+    if extra:
+        raise ValueError(
+            f"make_dp_train_step is dp-only: mesh axes {extra} are not in "
+            f"dp_axes {plan.dp_axes} (use make_train_step's GSPMD path for "
+            f"tensor/context parallelism)")
+    if not tcfg.grad_compress:
+        raise ValueError("the dp shard_map step IS the int8 wire — "
+                         "enable tcfg.grad_compress")
+    from ..optim.grad_compress import psum_int8_tree
+    from ..sharding import compat_shard_map
+    # the body sees per-replica local shards: the model runs mesh-less
+    # (a with_sharding_constraint cannot reference manual mesh axes)
+    loss_fn = make_loss_fn(lm, ShardPlan(mesh=None), tcfg)
+    policy = lm.cfg.quant.policy()
+    axis = plan.dp_axis()
+    ndev = plan.dp_size()
+    wire_spec = policy.spec_for("dp_wire")
+
+    def is_f(g):
+        return hasattr(g, "dtype") and g.dtype != jax.dtypes.float0 \
+            and jnp.issubdtype(g.dtype, jnp.floating)
+
+    def local_step(state: TrainState, batch):
+        res_local = None if state.residual is None else tuple(
+            None if r is None else r[0] for r in state.residual)
+        (loss, (metrics, obs)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True, allow_int=True)(state.params, batch,
+                                                   state.scales)
+        # scalar cross-replica means — bytes on the wire: a handful of f32s
+        loss = jax.lax.pmean(loss, axis)
+        metrics = jax.tree.map(lambda m: jax.lax.pmean(m, axis), metrics)
+        scales = state.scales
+        if scales is not None and obs:
+            obs = jax.tree.map(lambda o: jax.lax.pmean(o, axis), obs)
+            scales = policy.update_scales(scales, obs)
+        # THE payload collective: int8 codes + pmax block scales
+        summed, new_res = psum_int8_tree(grads, res_local, axis, wire_spec)
+        grads = jax.tree.map(lambda g: g / ndev if is_f(g) else g, summed)
+        want_health = policy.health and policy.enable and scales is not None
+        pre_edge = grads if want_health else None
+        grads, scales = _quantize_grad_edge(grads, scales, policy)
+        if tcfg.grad_clip > 0:
+            grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        else:
+            gnorm = jnp.zeros((), jnp.float32)
+        lr = lr_at(state.step, tcfg)
+        params, opt = adam_update(state.params, grads, state.opt, lr, tcfg)
+        params = lm_lambda_update(params, lm)
+        metrics = dict(metrics, loss=loss, gnorm=gnorm, lr=lr)
+        if want_health:
+            metrics["health"] = _train_health(pre_edge, scales, policy)
+        residual = None if new_res is None else tuple(
+            None if r is None else r[None] for r in new_res)
+        return TrainState(params, opt, state.step + 1, residual,
+                          scales), metrics
+
+    from jax.sharding import PartitionSpec as P
+    dp = P(plan.dp_axes)
+    state_specs = TrainState(params=P(), opt=P(), step=P(),
+                             residual=dp, scales=P())
+
+    def train_step(state: TrainState, batch):
+        batch_specs = jax.tree.map(
+            lambda b: P(plan.dp_axes, *([None] * (jnp.ndim(b) - 1))), batch)
+        f = compat_shard_map(local_step, plan.mesh,
+                             in_specs=(state_specs, batch_specs),
+                             out_specs=(state_specs, P()))
+        return f(state, batch)
+
+    return train_step
+
+
 def make_grad_accum_train_step(lm: LMDef, plan: ShardPlan, tcfg: TrainConfig,
                                n_micro: int):
     """Gradient-accumulation variant: batch leading dim = n_micro.

@@ -28,7 +28,9 @@ from ..data import Prefetcher, host_shard_info, lm_batch
 from ..models.frontend import synth_audio_frames, synth_vision_patches
 from ..models.lm import build_lm, init_lm, lm_param_counts
 from ..sharding import make_plan
-from ..launch.steps import TrainState, init_train_state, make_train_step
+from ..launch.steps import (TrainState, init_dp_train_state,
+                            init_train_state, make_dp_train_step,
+                            make_train_step)
 
 # a ~100M-param dense config for the end-to-end example driver
 LM100M = ModelConfig(name="lm100m", num_layers=12, d_model=768, num_heads=12,
@@ -100,8 +102,19 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
     params = init_lm(key, lm)
     # the numerics policy owns the managed scale-state tree (threaded
     # through TrainState; no-op scales=None when quantization is off)
-    state = init_train_state(params, tcfg, policy=cfg.quant.policy())
-    step_fn = jax.jit(make_train_step(lm, plan, tcfg), donate_argnums=(0,))
+    dp_only = (mesh is not None and tcfg.grad_compress
+               and all(a in plan.dp_axes for a in mesh.shape))
+    if dp_only:
+        # dp-only mesh: the explicit shard_map step — the int8 wire is the
+        # only payload-sized collective (see steps.make_dp_train_step)
+        state = init_dp_train_state(params, tcfg, plan,
+                                    policy=cfg.quant.policy())
+        step_fn = jax.jit(make_dp_train_step(lm, plan, tcfg),
+                          donate_argnums=(0,))
+    else:
+        state = init_train_state(params, tcfg, policy=cfg.quant.policy())
+        step_fn = jax.jit(make_train_step(lm, plan, tcfg),
+                          donate_argnums=(0,))
 
     ckpt = AsyncCheckpointer(tcfg.ckpt_dir)
     start = 0
@@ -179,7 +192,12 @@ def main():
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=200)
     ap.add_argument("--mesh", default=None,
-                    help="e.g. 2x2 to use a dev mesh (needs devices)")
+                    help="e.g. 2x2 for a (data, model) dev mesh, or a bare "
+                         "device count (e.g. 8) for the dp-only 1-D mesh "
+                         "(with --grad-compress: the shard_map int8-wire "
+                         "step)")
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="int8 + error-feedback gradient wire (dp_wire)")
     ap.add_argument("--trace-out", default=None,
                     help="write per-step train_step trace events (JSONL)")
     args = ap.parse_args()
@@ -193,11 +211,16 @@ def main():
         cfg = cfg.replace(quant=dataclasses.replace(cfg.quant, health=True))
     tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
                        warmup_steps=max(5, args.steps // 20),
-                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+                       ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+                       grad_compress=args.grad_compress)
     mesh = None
     if args.mesh:
-        d, m = (int(x) for x in args.mesh.split("x"))
-        mesh = jax.make_mesh((d, m), ("data", "model"))
+        if "x" in args.mesh:
+            d, m = (int(x) for x in args.mesh.split("x"))
+            mesh = jax.make_mesh((d, m), ("data", "model"))
+        else:
+            from .mesh import make_dp_mesh
+            mesh = make_dp_mesh(int(args.mesh))
     trace = None
     if args.trace_out:
         from ..obs import TraceRecorder

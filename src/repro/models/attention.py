@@ -90,7 +90,9 @@ def _chunk_constraint(plan, hq: int):
     def f(x):
         dims = [None] * x.ndim
         dims[1] = plan.dp_axes
-        if plan.strategy == "tp" and x.shape[3] % plan.mesh.shape["model"] == 0:
+        # guard via the plan (dp-only meshes have no "model" axis at all)
+        if plan.strategy == "tp" and plan.model_size() > 1 \
+                and x.shape[3] % plan.model_size() == 0:
             dims[3] = "model"
         return plan.constrain(x, P(*dims))
 

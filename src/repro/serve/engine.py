@@ -189,6 +189,21 @@ class Engine:
         self.plan = plan or ShardPlan(mesh=None)
         self.pool = KC.init_pool(lm, self.pcfg)
         self.spool = SC.init_state_pool(lm, self.pcfg.num_slots, self.scfg)
+        # multi-device serving: place params and both pools by the plan —
+        # KV pages head-sharded over ``model`` (plan.kv_page_spec), state
+        # features over d_inner/heads (plan.state_spec), per-slot scales
+        # replicated. The jitted step bodies re-assert these shardings on
+        # their pool outputs (_ckv/_cst) so the donated buffers keep their
+        # layout across steps; with no mesh both helpers are identity and
+        # every jaxpr is unchanged (tests/test_obs.py byte-identity).
+        self._pool_ns = self._spool_ns = None
+        if self.plan.mesh is not None:
+            self._pool_ns = self.plan.kv_pool_sharding(self.pool)
+            self._spool_ns = self.plan.state_pool_sharding(self.spool)
+            self.params = jax.device_put(
+                self.params, self.plan.params_sharding_tree(self.params))
+            self.pool = jax.device_put(self.pool, self._pool_ns)
+            self.spool = jax.device_put(self.spool, self._spool_ns)
         # optional obs.TraceRecorder: host-side only — events are emitted
         # from the untraced step loop, never inside a jitted body, so an
         # attached recorder leaves every jaxpr unchanged (tests/test_obs.py
@@ -258,18 +273,54 @@ class Engine:
         self._chunk_fns = CompileCache(make_chunk,
                                        max_live=ecfg.max_prefill_shapes)
         self._decode_jit = jax.jit(self._decode_impl, donate_argnums=(1, 2))
-        self._write_prefill_jit = jax.jit(KC.write_prefill,
+        self._write_prefill_jit = jax.jit(self._write_prefill_impl,
                                           donate_argnums=(0,),
                                           static_argnames=("pcfg",))
-        self._write_state_jit = jax.jit(SC.write_prefill,
+        self._write_state_jit = jax.jit(self._write_state_impl,
                                         donate_argnums=(0,),
                                         static_argnames=("scfg",))
-        self._reset_state_jit = jax.jit(SC.reset_slot, donate_argnums=(0,))
-        self._fork_jit = jax.jit(KC.fork_page, donate_argnums=(0,))
-        self._adopt_jit = jax.jit(KC.adopt_scales, donate_argnums=(0,))
+        self._reset_state_jit = jax.jit(self._reset_state_impl,
+                                        donate_argnums=(0,))
+        self._fork_jit = jax.jit(self._fork_impl, donate_argnums=(0,))
+        self._adopt_jit = jax.jit(self._adopt_impl, donate_argnums=(0,))
         self._sample_jit = jax.jit(sample_tokens)
 
     # ---- jitted step bodies -------------------------------------------
+    def _ckv(self, pool):
+        """Re-assert the KV pool's plan sharding on a jitted body's output
+        so donation round-trips the layout (head-sharded pages stay head-
+        sharded). Mesh-less engines: identity — jaxprs are unchanged."""
+        if self._pool_ns is None:
+            return pool
+        return jax.tree.map(jax.lax.with_sharding_constraint, pool,
+                            self._pool_ns)
+
+    def _cst(self, spool):
+        if self._spool_ns is None:
+            return spool
+        return jax.tree.map(jax.lax.with_sharding_constraint, spool,
+                            self._spool_ns)
+
+    def _write_prefill_impl(self, pool, cache, table_row, slot, length,
+                            pcfg):
+        return self._ckv(KC.write_prefill(pool, cache, table_row, slot,
+                                          length, pcfg))
+
+    def _write_state_impl(self, spool, cache, slot, scfg):
+        return self._cst(SC.write_prefill(spool, cache, slot, scfg))
+
+    def _reset_state_impl(self, spool, slot):
+        return self._cst(SC.reset_slot(spool, slot))
+
+    def _fork_impl(self, pool, src, dst):
+        # COW fork on (possibly head-sharded) pages: the copy indexes the
+        # unsharded page axis only, so each shard forks its own head slice
+        # of the page — codes verbatim, no cross-device traffic
+        return self._ckv(KC.fork_page(pool, src, dst))
+
+    def _adopt_impl(self, pool, slot, snap):
+        return self._ckv(KC.adopt_scales(pool, slot, snap))
+
     def _fused_for(self, sub) -> bool:
         """Fused-kernel eligibility of one sublayer (the fallback matrix:
         GQA/MQA/MHA fused; MLA latent attention stays on the gather
@@ -297,7 +348,8 @@ class Engine:
             b = x.shape[0]
             attn = KC.fused_attend(new_dsub["k"], new_dsub["v"], ssub["k"],
                                    ssub["v"], qd["q"][:, 0], table, lens,
-                                   self.pcfg, impl=self.ecfg.fused_impl)
+                                   self.pcfg, impl=self.ecfg.fused_impl,
+                                   plan=self.plan)
             attn = attn[:, :d.real_heads].reshape(b, 1,
                                                   d.real_heads * d.head_dim)
             out = apply_site(pp["mixer"]["o"], attn, d.o, cfg)
@@ -397,8 +449,9 @@ class Engine:
         x = rms_norm(x, params["final_norm"]["scale"], lm.cfg.norm_eps)
         logits = apply_site(params["head"], x, lm.head, lm.cfg)
         out = (logits[:, 0],
-               {"data": new_data, "scale_log2": pool["scale_log2"]},
-               {"data": new_sdata, "scale_log2": new_sscale})
+               self._ckv({"data": new_data,
+                          "scale_log2": pool["scale_log2"]}),
+               self._cst({"data": new_sdata, "scale_log2": new_sscale}))
         if self._health:
             # per-layer ys stacked on axis 0: fold to per-step totals
             keys = ("kv_clipped", "kv_total", "state_clipped", "state_total",
@@ -496,8 +549,9 @@ class Engine:
         x = rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
         logits = apply_site(params["head"], x, lm.head, cfg)
         last = logits[0, valid_len - 1][None]              # (1,V)
-        return (last, {"data": new_data, "scale_log2": new_scale},
-                {"data": new_sdata, "scale_log2": new_sscale})
+        return (last,
+                self._ckv({"data": new_data, "scale_log2": new_scale}),
+                self._cst({"data": new_sdata, "scale_log2": new_sscale}))
 
     # ---- request lifecycle --------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 32,

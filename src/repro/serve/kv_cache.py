@@ -192,7 +192,7 @@ def gather_slots(data_l: jax.Array, scale_l: jax.Array, table: jax.Array,
 def fused_attend(kdata_l: jax.Array, vdata_l: jax.Array, kscale_l: jax.Array,
                  vscale_l: jax.Array, q: jax.Array, table: jax.Array,
                  lens: jax.Array, pcfg: PoolConfig,
-                 impl: str = "auto") -> jax.Array:
+                 impl: str = "auto", plan=None) -> jax.Array:
     """GQA decode attention straight off the paged pool — the fused
     alternative to ``gather_slots`` + ``models/attention.py::gqa_attend``.
 
@@ -205,11 +205,15 @@ def fused_attend(kdata_l: jax.Array, vdata_l: jax.Array, kscale_l: jax.Array,
     — the (B, max_len, *feat) fp32 slot view is never materialized.
 
     q: (B, Hq, Dh). Returns (B, Hq, Dh) in q.dtype.
+
+    ``plan``: a ``ShardPlan`` whose mesh head-shards the pool
+    (``plan.kv_page_spec``) makes the walk run shard_map'd per device on
+    its local KV heads — see ``kernels/ops.py::paged_attention``.
     """
     from ..kernels.ops import paged_attention
     return paged_attention(q, kdata_l, vdata_l, kscale_l, vscale_l,
                            table, lens, page_size=pcfg.page_size,
-                           quantized=pcfg.quantized, impl=impl)
+                           quantized=pcfg.quantized, impl=impl, plan=plan)
 
 
 def append_token(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,

@@ -5,7 +5,12 @@ few-shot preambles, multi-turn history.  The slot-paged pool is already
 page-indirect (a slot's row of the page table is just a list of physical
 page ids), so two requests whose prompts agree on the first ``k`` pages can
 map the *same* physical pages and skip prefill for those tokens entirely —
-the vLLM/SGLang idea, grown over this repo's int8 pool.
+the vLLM/SGLang idea, grown over this repo's int8 pool.  The tree is pure
+host-side bookkeeping over global page ids, and the pool's page axis is
+never mesh-sharded (``ShardPlan.kv_page_spec``) — on a TP mesh a COW fork
+(``kv_cache.fork_page``) indexes pages only, so every device forks its own
+KV-head slice locally and sharing works unchanged on head-sharded pools
+(tests/test_sharded_serve.py::prefix).
 
 Structure
 ---------

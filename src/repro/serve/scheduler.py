@@ -16,6 +16,13 @@ length vector); this module owns the mutable bookkeeping that feeds it:
 - **Chunked prefill**: prompts longer than ``prefill_chunk`` are split into
   fixed-size chunks so admission work is bounded per engine iteration and
   compiled prefill shapes stay reusable.
+
+Mesh invariance: all bookkeeping here is in *logical* slot/page ids. When
+the engine places the pool on a mesh (``ShardPlan.kv_pool_pspec``) only
+feature axes (KV heads / d_inner) are sharded — the page axis never is —
+so one global page id addresses the same page on every shard and this
+scheduler (and the radix prefix cache above it) runs unchanged whether the
+pool lives on one device or eight.
 """
 from __future__ import annotations
 

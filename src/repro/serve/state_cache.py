@@ -7,7 +7,10 @@ Layout: one device tensor per (sublayer, state tensor) with shape
 engine's layer scan, ``num_slots`` the decode-batch lanes.  A slot's state
 is overwritten every decode step (there is no paging: state does not grow
 with sequence length), so the pool's resident bytes are fixed at
-construction.
+construction.  On a TP mesh the engine places the pool by
+``ShardPlan.state_pool_pspec``: the feature axis carrying d_inner / heads
+shards over ``model`` (mamba ``conv``/``h``, rwkv6 ``shift``/``wkv``);
+the slot axis and the per-(layer, slot) scales stay replicated.
 
 Quantization (the ``ssm_state`` site of ``NumericsPolicy``): states are
 stored as int8 codes on the pow-2 grid with one ``scale_log2`` per (layer,

@@ -37,13 +37,28 @@ def compat_shard_map(f, mesh, in_specs, out_specs):
 
 
 def _div(n: int, mesh: Mesh | None, axis) -> bool:
+    """True when dim ``n`` can shard over mesh ``axis``: every named axis
+    exists on the mesh (a dp-only 1-D mesh has no ``model`` axis — absent
+    axes mean "don't shard", not KeyError) and ``n`` divides evenly."""
     if mesh is None or axis is None:
         return False
-    if isinstance(axis, tuple):
-        size = int(np.prod([mesh.shape[a] for a in axis]))
-    else:
-        size = mesh.shape[axis]
+    axes = axis if isinstance(axis, tuple) else (axis,)
+    if any(a not in mesh.shape for a in axes):
+        return False
+    size = int(np.prod([mesh.shape[a] for a in axes]))
     return n % size == 0 and n >= size
+
+
+# Param-leaf names that stay replicated even when >= 2-D (stacking adds a
+# leading layer axis to 1-D vectors): biases, norm gains, rwkv6 decay/bonus
+# and token-shift mixes, mamba conv/A/D, TT wscales. Projection matrices
+# ("w" under q/kv/o/gate/up/down/... sites) are deliberately absent — every
+# one of them must receive a non-trivial spec (tests/test_sharding.py audits
+# the whole zoo for this).
+_REPLICATED_LEAVES = frozenset({
+    "b", "bias", "scale", "wscale_log2", "ln_x_scale",
+    "w0", "u", "mu_x", "mu_ffn", "A_log", "D", "conv_w", "conv_b",
+})
 
 
 @dataclass(frozen=True)
@@ -141,6 +156,70 @@ class ShardPlan:
         rest = (None,) * (x.ndim - 1)
         return self.constrain(x, P(self.dp_axes, *rest))
 
+    # ---- serving pools -------------------------------------------------
+    def model_size(self) -> int:
+        if self.mesh is None or "model" not in self.mesh.shape:
+            return 1
+        return int(self.mesh.shape["model"])
+
+    def shards_kv_heads(self, hkv: int) -> bool:
+        """True when the paged pool's KV-head axis is sharded over ``model``
+        — the condition under which the fused page walk runs per-device on
+        its local heads (query heads group contiguously per KV head, so a
+        head-shard of q attends exactly to its own head-shard of pages)."""
+        return self.strategy == "tp" and _div(hkv, self.mesh, "model")
+
+    def kv_page_spec(self, shape: tuple[int, ...]) -> P:
+        """One KV-pool data leaf (L, P+1, page, *feat): GQA leaves
+        (..., Hkv, Dh) shard the KV-head axis over ``model``; MLA latent
+        leaves (..., latent) and non-divisible head counts replicate. The
+        page axis is never sharded — COW forks (``kv_cache.fork_page``) and
+        trash-page scatters address whole pages and stay shard-local."""
+        dims = [None] * len(shape)
+        if len(shape) == 5 and self.shards_kv_heads(shape[3]):
+            dims[3] = "model"
+        return P(*dims)
+
+    def state_spec(self, name: str, shape: tuple[int, ...]) -> P:
+        """One state-pool data leaf (L, num_slots, *feat): the feature axis
+        carrying d_inner / heads shards over ``model`` — mamba ``conv``
+        (..., d_inner) and ``h`` (..., d_inner, d_state); rwkv6 ``shift``
+        (..., 1, d_model) and ``wkv`` (..., H, hd, hd)."""
+        dims = [None] * len(shape)
+        if self.strategy != "tp" or len(shape) < 3:
+            return P(*dims)
+        ax = 2 if name in ("h", "wkv") else len(shape) - 1
+        if _div(shape[ax], self.mesh, "model"):
+            dims[ax] = "model"
+        return P(*dims)
+
+    def kv_pool_pspec(self, pool) -> Any:
+        """PartitionSpec tree for a ``serve/kv_cache.py`` pool: data leaves
+        by ``kv_page_spec``; per-(layer, slot) scale rows replicated (every
+        head shard decodes its codes under the same pow-2 grid)."""
+        return {"data": jax.tree.map(lambda a: self.kv_page_spec(a.shape),
+                                     pool["data"]),
+                "scale_log2": jax.tree.map(lambda a: P(*([None] * a.ndim)),
+                                           pool["scale_log2"])}
+
+    def state_pool_pspec(self, pool) -> Any:
+        """PartitionSpec tree for a ``serve/state_cache.py`` pool."""
+        def leaf(path, a):
+            name = str(getattr(path[-1], "key", path[-1]))
+            return self.state_spec(name, a.shape)
+
+        return {"data": jax.tree_util.tree_map_with_path(leaf, pool["data"]),
+                "scale_log2": jax.tree.map(lambda a: P(*([None] * a.ndim)),
+                                           pool["scale_log2"])}
+
+    def kv_pool_sharding(self, pool) -> Any:
+        return jax.tree.map(self.ns, self.kv_pool_pspec(pool),
+                            is_leaf=lambda s: isinstance(s, P))
+
+    def state_pool_sharding(self, pool) -> Any:
+        return jax.tree.map(self.ns, self.state_pool_pspec(pool),
+                            is_leaf=lambda s: isinstance(s, P))
+
     # ---- parameters ---------------------------------------------------
     def param_spec(self, path: str, shape: tuple[int, ...]) -> P:
         """PartitionSpec for one param leaf, identified by its tree path."""
@@ -156,9 +235,12 @@ class ShardPlan:
         is_stacked = "layers" in parts
         if len(shape) < 2:
             return P()
-        # TT cores / lambdas / norms / small vectors: replicated
-        if name.startswith(("core_", "lambda_", "wscale", "scale", "b",
-                            "w0", "u", "mu", "A_log", "D", "conv")):
+        # TT cores / lambdas / norms / small vectors: replicated. Exact
+        # names (not prefixes): a prefix match would silently replicate any
+        # future >= 2-D leaf that happens to share a first letter ("up" vs
+        # "u", "beta" vs "b", "damp" vs "D"). Only the genuinely numbered
+        # TT families (core_N / lambda_N) match by prefix.
+        if name in _REPLICATED_LEAVES or name.startswith(("core_", "lambda_")):
             return P()
 
         dims: list[Any] = [None] * len(shape)
@@ -224,19 +306,18 @@ class ShardPlan:
         return P(*dims)
 
     def params_pspec_tree(self, params) -> Any:
-        """PartitionSpec tree matching a params pytree."""
-        flat = jax.tree_util.tree_flatten_with_path(params)[0]
-        specs = {}
-        for path, leaf in flat:
+        """PartitionSpec tree matching a params pytree. A single
+        ``tree_map_with_path`` pass: each leaf's spec is computed in place
+        from its own path, so distinct paths can never collide (the previous
+        implementation keyed a dict by "/"-joined path strings and rebuilt
+        the tree from it — two paths stringifying identically silently
+        overwrote each other's spec)."""
+        def spec(path, leaf):
             key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
                            for p in path)
-            specs[key] = self.param_spec(key, leaf.shape)
-        # rebuild tree
-        treedef = jax.tree_util.tree_structure(params)
-        leaves = [specs["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
-                                 for p in path)]
-                  for path, _ in flat]
-        return jax.tree_util.tree_unflatten(treedef, leaves)
+            return self.param_spec(key, leaf.shape)
+
+        return jax.tree_util.tree_map_with_path(spec, params)
 
     def params_sharding_tree(self, params) -> Any:
         spec_tree = self.params_pspec_tree(params)

@@ -69,6 +69,7 @@ def _static_greedy(lm, params, prompt, gen_len, max_len):
 # (a) fp32 continuous batching == static reference, token for token
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["internlm2-1.8b", "deepseek-v2-236b"])
 def test_continuous_batching_matches_static_decode(arch):
     cfg, lm, params = _setup(arch)

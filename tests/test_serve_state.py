@@ -76,6 +76,7 @@ def _static_greedy(lm, params, prompt, gen_len, max_len):
 # (a) fp32 continuous batching == static reference, token for token
 # ---------------------------------------------------------------------------
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["rwkv6-1.6b", "jamba-1.5-large"])
 def test_ssm_continuous_batching_matches_static_decode(arch):
     cfg, lm, params = _setup(arch)
@@ -99,6 +100,7 @@ def test_ssm_continuous_batching_matches_static_decode(arch):
         assert s["cache_bytes"] == 0        # pure-SSM: no KV pool at all
 
 
+@pytest.mark.slow
 def test_jamba_preemption_under_page_pressure_matches_static():
     """Hybrid: attn-page exhaustion preempts the youngest slot; its state
     is rebuilt by re-prefill and the resumed request still matches the
