@@ -1,14 +1,17 @@
 """CI telemetry-schema assertions (the smoke gate for repro.obs).
 
 Validates the artifacts the ``--trace-out`` bench runs emit: the trace
-JSONL carries the engine event schema, the BENCH documents grow the
-``telemetry`` / ``quant_health`` keys, and every clip fraction is finite
-and < 0.5 at the seed config (a clip fraction near the 0.5 ceiling means
-the pow-2 scale manager is mis-tracking — the §3.3 regression this guards).
+JSONL carries the engine event schema (including the paged-pool and
+prefix-cache event kinds), the BENCH documents grow the ``telemetry`` /
+``quant_health`` / ``memory`` keys, every clip fraction is finite and
+< 0.5 at the seed config, the trace ring never dropped an event at bench
+capacity, and the live memory ledger reconciles — with the train doc's
+four-site live reduction agreeing with the analytic Table-1 figure.
 
     python benchmarks/check_telemetry.py \
         --serve BENCH_serve_telemetry.json --serve-trace serve_trace.jsonl \
-        --train BENCH_train_wire.json --train-trace train_trace.jsonl
+        --train BENCH_train_wire.json --train-trace train_trace.jsonl \
+        --prefix BENCH_prefix_serve.json --prefix-trace prefix_trace.jsonl
 """
 from __future__ import annotations
 
@@ -16,8 +19,13 @@ import argparse
 import json
 import math
 
+# always present in a default engine sweep that decodes past one page
 SERVE_EVENT_KINDS = {"submit", "admit", "prefill", "first_token",
-                     "decode_step", "retire"}
+                     "decode_step", "retire", "page_alloc", "page_free"}
+# kinds a trace may carry; anything outside this set is a schema drift
+KNOWN_EVENT_KINDS = SERVE_EVENT_KINDS | {
+    "prefill_chunk", "preempt", "cache_hit", "cow_fork", "prefix_evict",
+    "state_snapshot", "state_restore", "bench_cell", "train_step"}
 
 
 def _check_fraction(name: str, f: float) -> None:
@@ -25,16 +33,43 @@ def _check_fraction(name: str, f: float) -> None:
         f"{name}: clip/sat fraction {f!r} out of range"
 
 
+def _check_ring(tel: dict) -> None:
+    """The bench workload must fit the recorder: capacity respected and
+    nothing silently dropped."""
+    assert tel["trace_events"] > 0, tel
+    assert tel["trace_events"] <= tel["trace_capacity"], tel
+    assert tel["trace_dropped"] == 0, \
+        f"trace ring dropped {tel['trace_dropped']} events at bench capacity"
+
+
+def _check_kinds(trace_path: str, required: set[str]) -> set[str]:
+    kinds = {json.loads(line)["kind"] for line in open(trace_path)}
+    missing = required - kinds
+    assert not missing, f"trace {trace_path} missing event kinds: {missing}"
+    unknown = kinds - KNOWN_EVENT_KINDS
+    assert not unknown, f"trace {trace_path} unknown event kinds: {unknown}"
+    return kinds
+
+
+def _check_memory(cell: dict, label: str) -> dict:
+    mem = cell.get("memory")
+    assert mem and mem["total_bytes"] > 0, f"{label}: no memory ledger"
+    rec = mem["reconcile"]
+    assert rec["ok"], f"{label}: ledger/live-arrays reconcile failed: {rec}"
+    return mem
+
+
 def check_serve(doc_path: str, trace_path: str) -> None:
     doc = json.load(open(doc_path))
     tel = doc["telemetry"]
-    assert tel["trace_events"] > 0, tel
-    assert tel["trace_dropped"] == 0, tel
+    _check_ring(tel)
     assert tel["codec_fallbacks"] == 0, \
         f"serve sweep took {tel['codec_fallbacks']} reference-codec fallbacks"
-    kinds = {json.loads(line)["kind"] for line in open(trace_path)}
-    missing = SERVE_EVENT_KINDS - kinds
-    assert not missing, f"trace {trace_path} missing event kinds: {missing}"
+    kinds = _check_kinds(trace_path, SERVE_EVENT_KINDS)
+    # conditional kinds: required exactly when the counters say the code
+    # path fired
+    if any(c["preemptions"] > 0 for c in doc["cells"]):
+        assert "preempt" in kinds, kinds
     int8 = [c for c in doc["cells"] if c["kv_cache"] == "int8"]
     assert int8, doc["cells"]
     for c in int8:
@@ -44,8 +79,45 @@ def check_serve(doc_path: str, trace_path: str) -> None:
                         kv["clip_fraction"])
     for c in doc["cells"]:
         assert c["batch_fill_mean"] > 0, c
+        label = f"serve slots={c['slots']} kv={c['kv_cache']}"
+        mem = _check_memory(c, label)
+        assert mem["sites"]["kv_pool"]["bytes"] == c["cache_bytes"], \
+            f"{label}: ledger kv_pool disagrees with cache_bytes"
+        assert "decode" in mem["watermarks"], mem["watermarks"].keys()
     print(f"[check_telemetry] serve OK: {tel['trace_events']} events, "
-          f"{len(int8)} int8 cells with kv health")
+          f"{len(int8)} int8 cells with kv health + reconciled ledgers")
+
+
+def check_prefix(doc_path: str, trace_path: str) -> None:
+    """The open-loop prefix sweep: COW/prefix event kinds and the verified
+    bytes-saved figure of the prefix-on cells."""
+    doc = json.load(open(doc_path))
+    tel = doc["telemetry"]
+    _check_ring(tel)
+    kinds = _check_kinds(trace_path, {"submit", "admit", "prefill",
+                                      "decode_step", "retire"})
+    on = [c for c in doc["cells"] if c["prefix_cache"] == "on"]
+    assert on, doc["cells"]
+    if any(c["cow_forks"] > 0 for c in on):
+        assert {"cache_hit", "cow_fork"} <= kinds, kinds
+    if any(c["prefix_evictions"] > 0 for c in on):
+        assert "prefix_evict" in kinds, kinds
+    if any(c["preemptions"] > 0 for c in doc["cells"]):
+        assert "preempt" in kinds, kinds
+    saved_peak = 0
+    for c in doc["cells"]:
+        label = f"prefix={c['prefix_cache']} shared={c['shared_frac']}"
+        mem = _check_memory(c, label)
+        if c["prefix_cache"] == "on":
+            site = mem["sites"].get("prefix_bytes_saved", {})
+            assert not site.get("counted", False), \
+                f"{label}: prefix overlay must be uncounted"
+            saved_peak = max(saved_peak, site.get("peak_bytes", 0))
+    hits = any(c["prefix_hit_tokens"] > 0 for c in on)
+    assert saved_peak > 0 or not hits, \
+        "prefix hits occurred but the ledger never saw shared pages"
+    print(f"[check_telemetry] prefix OK: {tel['trace_events']} events, "
+          f"peak bytes saved {saved_peak}")
 
 
 def check_train(doc_path: str, trace_path: str) -> None:
@@ -56,11 +128,23 @@ def check_train(doc_path: str, trace_path: str) -> None:
         _check_fraction(f"train {site} clip", qh[site]["clip_fraction"])
         _check_fraction(f"train {site} sat", qh[site]["sat_fraction"])
     assert qh["grad_edge"]["total"] > 0, qh
+    mem = doc["memory"]
+    assert mem["reconcile"]["ok"], mem["reconcile"]
+    live = mem["table1_live_reduction_x"]
+    analytic = doc["reduction_x"]
+    assert live >= 8, \
+        f"live Table-1 reduction {live:.2f}x below the paper's 8x floor"
+    assert abs(live - analytic) <= 0.1 * analytic, \
+        f"live ledger {live:.2f}x vs analytic {analytic:.2f}x drifted >10%"
+    assert 0.9 <= mem["live_vs_analytic_frac"] <= 1.1, mem
+    if "telemetry" in doc:
+        _check_ring(doc["telemetry"])
     steps = [json.loads(line) for line in open(trace_path)]
     assert steps and all(s["kind"] == "train_step" and s["dur"] > 0
                          for s in steps), steps[:3]
     print(f"[check_telemetry] train OK: {len(steps)} train_step events, "
-          f"grad_edge sat {qh['grad_edge']['sat_fraction']:.4f}")
+          f"grad_edge sat {qh['grad_edge']['sat_fraction']:.4f}, "
+          f"live reduction {live:.1f}x (analytic {analytic:.1f}x)")
 
 
 def main() -> None:
@@ -69,11 +153,15 @@ def main() -> None:
     ap.add_argument("--serve-trace")
     ap.add_argument("--train")
     ap.add_argument("--train-trace")
+    ap.add_argument("--prefix")
+    ap.add_argument("--prefix-trace")
     args = ap.parse_args()
     if args.serve:
         check_serve(args.serve, args.serve_trace)
     if args.train:
         check_train(args.train, args.train_trace)
+    if args.prefix:
+        check_prefix(args.prefix, args.prefix_trace)
 
 
 if __name__ == "__main__":

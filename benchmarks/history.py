@@ -1,0 +1,241 @@
+"""Bench-history ledger + noise-aware regression gate.
+
+Every bench run appends one JSONL entry to ``BENCH_history.jsonl`` — git
+SHA, UTC timestamp, bench name, and the gate metrics extracted from the
+BENCH document — so the repo carries its own measurement trajectory. The
+gate then compares the newest entry per bench against the **median of the
+last <=5 prior entries** with per-metric relative tolerances: tight (5%)
+for byte-accounting metrics, which are deterministic functions of the
+config, and loose (50–100%) for wall-clock throughput, which rides shared
+CI machines.  Median-of-window + per-class tolerance is the noise model:
+one slow machine day neither fails the gate nor poisons the baseline.
+
+    python benchmarks/history.py append --doc BENCH_train_wire.json
+    python benchmarks/history.py gate          # exit 1 on any regression
+
+The benches append automatically when writing ``--out`` (their
+``_history_append`` hook calls :func:`append_entry`); CI runs ``gate`` as a
+separate step after the smoke benches.  ``REPRO_BENCH_HISTORY`` overrides
+the ledger path (default: ``BENCH_history.jsonl`` at the repo root).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+HISTORY_ENV = "REPRO_BENCH_HISTORY"
+DEFAULT_PATH = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "BENCH_history.jsonl")
+WINDOW = 5   # prior entries the gate medians over
+
+
+def history_path(path: str | None = None) -> str:
+    return path or os.environ.get(HISTORY_ENV) or DEFAULT_PATH
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)))
+        if out.returncode == 0 and out.stdout.strip():
+            return out.stdout.strip()
+    except OSError:
+        pass
+    return os.environ.get("GITHUB_SHA", "unknown")
+
+
+def _cells(doc: dict, **match) -> list[dict]:
+    return [c for c in doc.get("cells", [])
+            if all(c.get(k) == v for k, v in match.items())]
+
+
+def _max_over(vals):
+    vals = [v for v in vals if v is not None]
+    return max(vals) if vals else None
+
+
+def _min_over(vals):
+    vals = [v for v in vals if v is not None]
+    return min(vals) if vals else None
+
+
+# Per-bench gate metrics. ``dir`` is the GOOD direction ("higher": a
+# regression is candidate < median*(1-tol)); ``tol`` is the relative noise
+# band.  Byte/reduction metrics are deterministic -> 5%; wall-clock
+# throughput on shared CI runners -> 50%; step timing is gated only
+# against a 2x blowup (tol 1.0).
+GATES: dict[str, list[dict]] = {
+    "serve_throughput": [
+        dict(metric="tokens_per_s_best", dir="higher", tol=0.5,
+             get=lambda d: _max_over(c.get("tokens_per_s")
+                                     for c in d.get("cells", []))),
+        dict(metric="cache_reduction_vs_fp32", dir="higher", tol=0.05,
+             get=lambda d: _min_over(c.get("cache_reduction_vs_fp32")
+                                     for c in _cells(d, kv_cache="int8"))),
+        dict(metric="memory_total_bytes_int8", dir="lower", tol=0.05,
+             get=lambda d: _min_over(
+                 c["memory"]["total_bytes"]
+                 for c in _cells(d, kv_cache="int8") if "memory" in c)),
+    ],
+    "prefix_serve": [
+        dict(metric="goodput_tokens_per_s", dir="higher", tol=0.5,
+             get=lambda d: _max_over(c.get("goodput_tokens_per_s")
+                                     for c in _cells(d, prefix_cache="on"))),
+        dict(metric="prefill_compute_savings", dir="higher", tol=0.1,
+             get=lambda d: d.get("savings_at_top_shared_frac")),
+        # verified bytes figure: (logical - physical) pages * page_nbytes
+        # at its peak — COW forks make the instantaneous end-of-run value
+        # timing-dependent, hence the loose band
+        dict(metric="prefix_bytes_saved_peak", dir="higher", tol=0.5,
+             get=lambda d: _max_over(
+                 c["memory"]["sites"]["prefix_bytes_saved"]["peak_bytes"]
+                 for c in _cells(d, prefix_cache="on") if "memory" in c)),
+    ],
+    "train_wire": [
+        dict(metric="reduction_x", dir="higher", tol=0.05,
+             get=lambda d: d.get("reduction_x")),
+        dict(metric="table1_live_reduction_x", dir="higher", tol=0.05,
+             get=lambda d: (d.get("memory") or {}).get(
+                 "table1_live_reduction_x")),
+        dict(metric="step_ms_low_precision", dir="lower", tol=1.0,
+             get=lambda d: d.get("step_ms_low_precision")),
+    ],
+    "ssm_serve": [
+        dict(metric="state_reduction_int8", dir="higher", tol=0.05,
+             get=lambda d: d.get("state_reduction_int8")),
+        dict(metric="tokens_per_s_int8", dir="higher", tol=0.5,
+             get=lambda d: _max_over(c.get("tokens_per_s")
+                                     for c in _cells(d, mode="engine",
+                                                     state="int8"))),
+    ],
+    "paged_attention": [
+        dict(metric="decode_tokens_per_s_fused", dir="higher", tol=0.5,
+             get=lambda d: _max_over(c.get("decode_tokens_per_s")
+                                     for c in _cells(d, impl="fused"))),
+    ],
+}
+
+
+def extract_metrics(doc: dict) -> dict[str, float]:
+    """The gate metrics of one BENCH document (empty for ungated benches)."""
+    out = {}
+    for g in GATES.get(doc.get("bench", ""), []):
+        try:
+            v = g["get"](doc)
+        except (KeyError, TypeError, ValueError):
+            v = None
+        if v is not None:
+            out[g["metric"]] = float(v)
+    return out
+
+
+def read_history(path: str | None = None) -> list[dict]:
+    path = history_path(path)
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        return [json.loads(line) for line in f if line.strip()]
+
+
+def append_entry(doc: dict, path: str | None = None, *,
+                 sha: str | None = None, timestamp: str | None = None
+                 ) -> dict:
+    """Append one bench result to the history ledger; returns the entry."""
+    path = history_path(path)
+    entry = {
+        "bench": doc.get("bench", "unknown"),
+        "git_sha": sha or _git_sha(),
+        "timestamp": timestamp or time.strftime("%Y-%m-%dT%H:%M:%SZ",
+                                                time.gmtime()),
+        "metrics": extract_metrics(doc),
+    }
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def _median(vals: list[float]) -> float:
+    vals = sorted(vals)
+    n = len(vals)
+    return vals[n // 2] if n % 2 else 0.5 * (vals[n // 2 - 1] + vals[n // 2])
+
+
+def check_regression(entry: dict, prior: list[dict]) -> list[str]:
+    """Gate one entry against its bench's prior entries. Returns failure
+    strings (empty list = pass; no priors for a metric = trivially pass —
+    that's how the first entry seeds the ledger)."""
+    fails = []
+    specs = {g["metric"]: g for g in GATES.get(entry.get("bench", ""), [])}
+    for name, cand in entry.get("metrics", {}).items():
+        g = specs.get(name)
+        if g is None:
+            continue
+        vals = [e["metrics"][name] for e in prior
+                if name in e.get("metrics", {})][-WINDOW:]
+        if not vals:
+            continue
+        med = _median(vals)
+        if g["dir"] == "higher" and cand < med * (1 - g["tol"]):
+            fails.append(
+                f"{entry['bench']}.{name}: {cand:.6g} < "
+                f"median({len(vals)}) {med:.6g} - {g['tol']:.0%}")
+        elif g["dir"] == "lower" and cand > med * (1 + g["tol"]):
+            fails.append(
+                f"{entry['bench']}.{name}: {cand:.6g} > "
+                f"median({len(vals)}) {med:.6g} + {g['tol']:.0%}")
+    return fails
+
+
+def gate(path: str | None = None) -> list[str]:
+    """Gate the newest entry of every bench in the history. Returns the
+    combined failure list."""
+    entries = read_history(path)
+    by_bench: dict[str, list[dict]] = {}
+    for e in entries:
+        by_bench.setdefault(e.get("bench", "unknown"), []).append(e)
+    fails = []
+    for bench, rows in sorted(by_bench.items()):
+        cand, prior = rows[-1], rows[:-1]
+        f = check_regression(cand, prior)
+        fails.extend(f)
+        state = "REGRESSED" if f else "ok"
+        print(f"[history] {bench}: {len(rows)} entries, newest "
+              f"{cand['git_sha'][:9]} {state} "
+              f"({len(cand.get('metrics', {}))} metrics, "
+              f"{len(prior)} priors)")
+    return fails
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    a = sub.add_parser("append", help="append one BENCH_*.json to history")
+    a.add_argument("--doc", required=True,
+                   help="BENCH document path, or '-' for stdin")
+    a.add_argument("--history", default=None)
+    g = sub.add_parser("gate", help="regression-gate the newest entry "
+                                    "of every bench; exit 1 on failure")
+    g.add_argument("--history", default=None)
+    args = ap.parse_args()
+
+    if args.cmd == "append":
+        doc = json.load(sys.stdin if args.doc == "-" else open(args.doc))
+        entry = append_entry(doc, args.history)
+        print(f"[history] appended {entry['bench']} @ "
+              f"{entry['git_sha'][:9]}: {entry['metrics']}")
+    elif args.cmd == "gate":
+        fails = gate(args.history)
+        if fails:
+            print("[history] REGRESSIONS:\n  " + "\n  ".join(fails))
+            raise SystemExit(1)
+        print("[history] gate passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -27,11 +27,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 import jax
 import numpy as np
+
+
+def _history_append(doc) -> None:
+    """Append this run to the bench-history ledger (git SHA + timestamp);
+    ``benchmarks/history.py gate`` reads it in CI."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import history
+    entry = history.append_entry(doc)
+    print(f"[history] {entry['bench']} @ {entry['git_sha'][:9]} -> "
+          f"{history.history_path()}", file=sys.stderr)
 
 
 def make_workload(vocab: int, *, requests: int, shared_frac: float,
@@ -113,6 +124,7 @@ def bench_cell(lm, params, plan, *, shared_frac: float, prefix_on: bool,
         "prefix_evictions": s["prefix_evictions"],
         "preemptions": s["preemptions"],
         "compile_evictions": s["compile_evictions"],
+        "memory": s["memory"],
     }
 
 
@@ -195,6 +207,7 @@ def main() -> None:
         n = write_jsonl(trace, args.trace_out)
         doc["telemetry"] = {"trace_jsonl": args.trace_out,
                             "trace_events": n,
+                            "trace_capacity": trace.capacity,
                             "trace_dropped": trace.dropped}
         print(f"  wrote {n} trace events to {args.trace_out}",
               file=sys.stderr)
@@ -203,6 +216,7 @@ def main() -> None:
         with open(args.out, "w") as f:
             f.write(text + "\n")
         print(f"wrote {args.out}", file=sys.stderr)
+        _history_append(doc)
     else:
         print(text)
 

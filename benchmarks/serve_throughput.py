@@ -32,11 +32,22 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 import time
 
 import jax
 import numpy as np
+
+
+def _history_append(doc) -> None:
+    """Append this run to the bench-history ledger (git SHA + timestamp);
+    ``benchmarks/history.py gate`` reads it in CI."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import history
+    entry = history.append_entry(doc)
+    print(f"[history] {entry['bench']} @ {entry['git_sha'][:9]} -> "
+          f"{history.history_path()}", file=sys.stderr)
 
 
 def plan_for(mesh: str | None):
@@ -101,6 +112,7 @@ def bench_cell(lm, params, plan, *, slots: int, quantized: bool,
         "cache_reduction_vs_fp32": s["cache_reduction"],
         "preemptions": s["preemptions"],
         "quant_health": s["quant_health"],
+        "memory": s["memory"],
     }
 
 
@@ -359,6 +371,7 @@ def run_ssm_sweep(arch: str, slots: int, requests: int, prompt_len: int,
             "state_reduction_vs_fp32": s["state_reduction"],
             "cache_bytes": s["cache_bytes"],
             "preemptions": s["preemptions"],
+            "memory": s["memory"],
         })
         print(f"  engine state={state}: {s['tokens_per_s']:.1f} tok/s, "
               f"{s['state_bytes']} state bytes "
@@ -446,6 +459,7 @@ def main() -> None:
         doc["telemetry"] = {
             "trace_jsonl": args.trace_out,
             "trace_events": n,
+            "trace_capacity": trace.capacity,
             "trace_dropped": trace.dropped,
             "codec_fallbacks": fallback_count(),
             "kernel_costs": kernel_costs(),
@@ -457,6 +471,7 @@ def main() -> None:
         with open(args.out, "w") as f:
             f.write(text + "\n")
         print(f"wrote {args.out}", file=sys.stderr)
+        _history_append(doc)
     else:
         print(text)
 

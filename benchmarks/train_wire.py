@@ -4,8 +4,12 @@ Runs one jitted low-precision train step on the FMNIST TT config (4-bit TT
 cores, 8-bit activations, 16-bit gradients, blockwise-int8 Adam moments,
 blockwise-int8 gradient wire, packed-int4x2 deploy export) and the fp32
 dense shadow, then emits per-NumericsPolicy-site measured bytes plus the
-aggregate reduction (``reduction_x``) and step timings
-(``BENCH_train_wire.json``). CI smoke asserts ``reduction_x >= 8``.
+aggregate reduction (``reduction_x``), step timings, and a ``memory`` key —
+a live ``repro.obs.MemoryLedger`` over the step's actual artifacts whose
+four-site ``table1_live_reduction_x`` must agree with the analytic
+``reduction_x`` (``BENCH_train_wire.json``). CI smoke asserts both are
+>= 8. Writing ``--out`` also appends the run to ``BENCH_history.jsonl``
+for the regression gate (``benchmarks/history.py``).
 
 ``fmnist_low_precision_step`` / ``fmnist_site_table`` are the single owners
 of the step construction and the per-site byte accounting —
@@ -32,6 +36,22 @@ import numpy as np
 def act_shapes(batch: int) -> list[tuple[int, int]]:
     """The MLP's three activation quant-edge sites (input/hidden/output)."""
     return [(batch, 896), (batch, 512), (batch, 16)]
+
+
+# the four sites of the paper's Table-1 comparison — the live ledger's
+# reduction over exactly this subset is what CI cross-checks against the
+# analytic ``reduction_x``
+TABLE1_SITES = ("tt_factor", "activation", "optimizer_moment", "dp_wire")
+
+
+def _history_append(doc: dict) -> None:
+    """Append this run to the bench-history ledger (git SHA + timestamp);
+    ``benchmarks/history.py gate`` reads it in CI."""
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    import history
+    entry = history.append_entry(doc)
+    print(f"[history] {entry['bench']} @ {entry['git_sha'][:9]} -> "
+          f"{history.history_path()}", file=sys.stderr)
 
 
 def fmnist_low_precision_step(batch: int = 64, opt_dtype: str = "int8",
@@ -152,6 +172,36 @@ def quant_health_table(result: dict) -> dict:
     }
 
 
+def live_memory_ledger(low: dict, deploy: dict, baseline: dict):
+    """Populate a ``repro.obs.MemoryLedger`` from the live artifacts of the
+    step just run — resident bytes measured off the actual arrays/QTensors
+    (``moment_nbytes`` / ``wire_nbytes`` / ``residual_nbytes`` /
+    ``policy.nbytes`` / the deploy export), fp32 shadows from the analytic
+    dense baseline.  This is the train-side half of the ISSUE's live-vs-
+    analytic Table-1 cross-check: the ledger's four-site reduction must
+    agree with ``fmnist_site_table``'s ``reduction_x``."""
+    from repro.obs import MemoryLedger
+    from repro.optim.adam import moment_nbytes
+    from repro.optim.grad_compress import residual_nbytes, wire_nbytes
+
+    policy = low["policy"]
+    led = MemoryLedger()
+    led.set_phase("train_step")
+    led.set("tt_factor", deploy["packed_bytes"], fp32=baseline["tt_factor"])
+    led.set("activation",
+            sum(policy.nbytes("activation", s)
+                for s in act_shapes(low["batch"])),
+            fp32=baseline["activation"])
+    led.set("optimizer_moment", moment_nbytes(low["opt"])[0],
+            fp32=baseline["optimizer_moment"])
+    enc, _ = wire_nbytes(low["grads"], policy.spec_for("dp_wire"))
+    led.set("dp_wire", enc, fp32=baseline["dp_wire"])
+    res = residual_nbytes(low["residual"])
+    if res:
+        led.set("grad_residual", res)
+    return led
+
+
 def _time(fn, *args, iters: int, warmup: int = 1) -> float:
     out = None
     for _ in range(warmup):
@@ -189,6 +239,11 @@ def run(batch: int, iters: int, trace=None) -> dict:
 
     total = sum(sites.values())
     base = sum(baseline.values())
+    led = live_memory_ledger(low, deploy, baseline)
+    mem = led.summary()
+    mem["table1_live_reduction_x"] = led.reduction_vs_fp32(TABLE1_SITES)
+    mem["live_vs_analytic_frac"] = led.total(TABLE1_SITES) / max(total, 1)
+    mem["reconcile"] = led.reconcile()
     return {
         "bench": "train_wire",
         "device": str(jax.devices()[0]),
@@ -206,6 +261,7 @@ def run(batch: int, iters: int, trace=None) -> dict:
         "reduction_x": base / total,
         "tt_deploy_reduction_x": deploy["reduction_x"],
         "quant_health": quant_health_table(low),
+        "memory": mem,
     }
 
 
@@ -230,6 +286,8 @@ def main():
         n = write_jsonl(trace, args.trace_out)
         doc["telemetry"] = {"trace_jsonl": args.trace_out,
                             "trace_events": n,
+                            "trace_capacity": trace.capacity,
+                            "trace_dropped": trace.dropped,
                             "kernel_costs": kernel_costs()}
         print(f"[train_wire] wrote {n} trace events to {args.trace_out}")
     text = json.dumps(doc, indent=2)
@@ -239,9 +297,11 @@ def main():
         with open(args.out, "w") as f:
             f.write(text + "\n")
         print(f"[train_wire] reduction {doc['reduction_x']:.1f}x "
-              f"(sites {doc['site_bytes']}) "
+              f"(live {doc['memory']['table1_live_reduction_x']:.1f}x, "
+              f"sites {doc['site_bytes']}) "
               f"step {doc['step_ms_low_precision']:.1f} ms "
               f"(fp32 {doc['step_ms_fp32']:.1f} ms) -> {args.out}")
+        _history_append(doc)
 
 
 if __name__ == "__main__":

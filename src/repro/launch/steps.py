@@ -41,6 +41,36 @@ def init_train_state(params, tcfg: TrainConfig,
                       jnp.zeros((), jnp.int32), residual, scales)
 
 
+def train_state_sites(state: TrainState) -> dict[str, dict]:
+    """Byte accounting of one concrete TrainState, keyed by ``obs.ledger``
+    site: params, int8 Adam moments, grad-wire error-feedback residual,
+    managed scale state.  Host-side only (reads ``.nbytes`` off concrete
+    arrays — never call inside a jitted body).
+
+    The fp32 shadow here is elementwise — what the *same tensors* would
+    cost in f32.  The paper's Table-1 dense baseline (dense weights vs TT
+    factors) is a modelling choice the benches supply per-site instead."""
+    from ..optim.adam import moment_nbytes
+    from ..optim.grad_compress import residual_nbytes
+    p_res = p_fp32 = 0
+    for leaf in jax.tree_util.tree_leaves(state.params):
+        p_res += int(leaf.nbytes)
+        p_fp32 += 4 * int(leaf.size)
+    m_res, m_fp32 = moment_nbytes(state.opt)
+    out = {
+        "params": {"bytes": p_res, "fp32_bytes": p_fp32},
+        "optimizer_moment": {"bytes": m_res, "fp32_bytes": m_fp32},
+    }
+    r = residual_nbytes(state.residual)
+    if r:
+        out["grad_residual"] = {"bytes": r, "fp32_bytes": r}
+    if state.scales is not None:
+        s = sum(int(l.nbytes)
+                for l in jax.tree_util.tree_leaves(state.scales))
+        out["scale_state"] = {"bytes": s, "fp32_bytes": s}
+    return out
+
+
 def _quantize_grad_edge(grads, scales, policy: NumericsPolicy):
     """The ``grad_edge`` site at the step level: round the weight-gradient
     tree onto the grad_bits pow-2 grid (paper: 16-bit gradients).

@@ -89,13 +89,28 @@ def make_batch_fn(cfg: ModelConfig, batch: int, seq: int, seed: int):
     return fn
 
 
+def _record_train_state(ledger, state) -> None:
+    """Fold one concrete TrainState into the memory ledger (host-side; runs
+    between steps, never inside the jitted body)."""
+    from .steps import train_state_sites
+    for site, row in train_state_sites(state).items():
+        ledger.set(site, row["bytes"], fp32=row["fp32_bytes"])
+
+
 def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
           batch: int, seq: int, mesh=None, verbose: bool = True,
-          trace=None):
+          trace=None, ledger=None):
     """``trace``: optional ``repro.obs.TraceRecorder`` — when attached the
     loop emits one host-side ``train_step`` event per step (step, loss,
     dur, and the step's quant-health aggregates when the policy traces
-    them). No recorder → the loop is byte-for-byte the old one."""
+    them). No recorder → the loop is byte-for-byte the old one.
+
+    ``ledger``: optional ``repro.obs.MemoryLedger`` (one is created
+    internally when None) — the loop records the TrainState's allocation
+    sites (params / int8 moments / wire residual / scale state) at init and
+    after every step, so per-phase peak watermarks and the live
+    reduction-vs-f32 figure cover the whole run.  Host-side only: the
+    jitted step is untouched."""
     plan = make_plan(mesh, strategy)
     lm = build_lm(cfg)
     key = jax.random.PRNGKey(tcfg.seed)
@@ -115,6 +130,11 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
         state = init_train_state(params, tcfg, policy=cfg.quant.policy())
         step_fn = jax.jit(make_train_step(lm, plan, tcfg),
                           donate_argnums=(0,))
+
+    if ledger is None:
+        from ..obs import MemoryLedger
+        ledger = MemoryLedger()
+    _record_train_state(ledger, state)     # "init" watermark
 
     ckpt = AsyncCheckpointer(tcfg.ckpt_dir)
     start = 0
@@ -146,6 +166,8 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
             loss = float(metrics["loss"])
             losses.append(loss)
             dt = time.time() - t0
+            ledger.set_phase("train_step")
+            _record_train_state(ledger, state)
             slow = monitor.observe(dt)
             if trace is not None:
                 ev = {"step": step, "loss": loss, "dur": dt}
@@ -177,6 +199,16 @@ def train(cfg: ModelConfig, strategy: str, tcfg: TrainConfig, *,
         print(f"[train] params dense-equiv {counts['dense']:.3e} "
               f"live {counts['live']:.3e} "
               f"compression {counts['compression']:.1f}x")
+        if mesh is not None:
+            ledger.record_devices(state.params, state.opt, state.residual)
+        rec = ledger.reconcile()
+        wm = ledger.watermark("train_step") or ledger.watermark("init")
+        print(f"[train] memory {ledger.total()/1e6:.2f} MB live "
+              f"({ledger.reduction_vs_fp32():.1f}x vs same-shape f32), "
+              f"train-step watermark {wm['total_bytes']/1e6:.2f} MB, "
+              f"reconcile {'ok' if rec['ok'] else 'FAILED'} "
+              f"(ledger covers {rec['coverage_frac']:.0%} of "
+              f"{rec['live_bytes']/1e6:.2f} MB live arrays)")
     return state, losses
 
 

@@ -8,6 +8,10 @@ One API for every layer of the stack:
   backends.
 - ``trace``: host-side ring-buffered ``TraceRecorder`` — engine/scheduler/
   train-driver structured events, zero device overhead.
+- ``ledger``: byte-accurate live ``MemoryLedger`` — every allocation site
+  (params, moments, residuals, KV/state pools, prefix pages) reports in;
+  per-phase peak watermarks, ``jax.live_arrays()`` reconcile, live
+  reduction-vs-fp32 figure.
 - ``spans``: per-request span trees derived from the flat event log.
 - ``export``: JSONL + Chrome-trace (Perfetto) writers.
 
@@ -18,6 +22,7 @@ from .counters import (CounterRegistry, fraction, kernel_costs,
                        saturation_counts, scale_drift_stats, tree_sat_stats)
 from .export import (chrome_trace, read_jsonl, write_chrome_trace,
                      write_jsonl)
+from .ledger import PHASES, MemoryLedger, device_breakdown
 from .spans import Span, check_nesting, request_spans
 from .trace import Event, TraceRecorder
 
@@ -26,6 +31,7 @@ __all__ = [
     "pow2_clip_stats", "saturation_counts", "scale_drift_stats",
     "tree_sat_stats", "fraction",
     "Event", "TraceRecorder",
+    "MemoryLedger", "device_breakdown", "PHASES",
     "Span", "request_spans", "check_nesting",
     "write_jsonl", "read_jsonl", "chrome_trace", "write_chrome_trace",
 ]

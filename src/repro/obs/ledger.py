@@ -1,0 +1,203 @@
+"""Live memory ledger: byte-accurate accounting every allocation site
+reports into, with per-phase peak watermarks and a reconcile check against
+``jax.live_arrays()``.
+
+The paper's headline claim is memory (Table 1: ultra memory reduction vs
+full-size fp32 training), and the repo's figures for it were analytic
+(``benchmarks/table1_memory.py``) or one-shot bench outputs.  The ledger
+makes the byte budget *observable live*: the serve engine, the train driver
+and the benches register every resident allocation site —
+
+==================  =====================================================
+site                what it accounts
+==================  =====================================================
+params              model parameters (TT cores / embeddings) as resident
+tt_factor           packed int4x2 TT-factor deploy bytes (train bench)
+activation          activation edges under the policy's activation spec
+optimizer_moment    int8-blockwise Adam moments (``QTensor.nbytes``)
+grad_residual       error-feedback residual of the int8 gradient wire
+dp_wire             encoded bytes of one gradient all-reduce
+scale_state         managed scale-state tree (f32 log2 exponents)
+kv_pool             the paged int8 KV pool (codes + per-slot scales)
+state_pool          the recurrent-state pool (mamba/rwkv6 mixers)
+prefix_*            logical vs physical mapped KV pages (uncounted
+                    overlay of ``kv_pool`` — see below)
+compile_cache       bucketed prefill executables (entry count only;
+                    XLA does not expose portable executable sizes)
+==================  =====================================================
+
+Two accounting rules keep the totals honest:
+
+- **No double counting.** Overlay sites describe bytes already counted by
+  another site (prefix logical/physical pages live *inside* the KV pool)
+  and register with ``counted=False``: they appear in the summary and in
+  watermark snapshots but never in ``total()``.  This is how
+  ``pages_saved`` becomes a *verified bytes figure*: ``prefix_bytes_saved``
+  is ``(logical - physical) * page_nbytes`` recomputed from the page table
+  at every step, not a monotone counter.
+- **One-sided reconcile.** The ledger tracks the sites the repo *owns*; the
+  process also holds batches, temporaries and donated-buffer shadows.  So
+  the invariant is subset-shaped: ``total() <= sum(a.nbytes for a in
+  jax.live_arrays()) * (1 + tol)``.  A ledger total exceeding live bytes
+  means a site is stale or double counted.
+
+Phases and watermarks: ``set_phase`` names the current phase (``init`` /
+``prefill`` / ``decode`` / ``train_step``) and every ``set`` updates that
+phase's peak watermark (counted total + a full per-site byte snapshot at
+the peak).  Each site additionally tracks its own all-time ``peak_bytes``,
+which is what the benches report for transient figures like bytes saved by
+prefix sharing.
+
+Everything here is host-side Python over concrete arrays — ledger updates
+never run inside jitted bodies, so the disabled path keeps decode jaxprs
+byte-identical (same contract as ``TraceRecorder``).
+"""
+from __future__ import annotations
+
+import jax
+
+PHASES = ("init", "prefill", "decode", "train_step")
+
+
+class MemoryLedger:
+    """Byte ledger over named allocation sites with per-phase watermarks."""
+
+    def __init__(self):
+        # site -> {"bytes", "fp32_bytes", "counted", "peak_bytes", "meta"}
+        self._sites: dict[str, dict] = {}
+        self.phase: str = "init"
+        # phase -> {"total_bytes": int, "sites": {name: bytes}}
+        self._watermarks: dict[str, dict] = {}
+        self.per_device: dict[str, int] | None = None
+
+    # ---- recording ------------------------------------------------------
+    def set(self, site: str, nbytes: int, fp32: int | None = None,
+            counted: bool = True, **meta) -> None:
+        """Report ``site``'s current resident bytes (idempotent overwrite).
+
+        ``fp32`` is the site's fp32-dense shadow — what the same state would
+        cost uncompressed (defaults to ``nbytes`` in the reduction figure).
+        ``counted=False`` marks an overlay site whose bytes are already
+        counted elsewhere (kept out of ``total()``/reconcile)."""
+        nbytes = int(nbytes)
+        prev = self._sites.get(site)
+        peak = max(nbytes, prev["peak_bytes"]) if prev else nbytes
+        self._sites[site] = {
+            "bytes": nbytes,
+            "fp32_bytes": None if fp32 is None else int(fp32),
+            "counted": bool(counted),
+            "peak_bytes": peak,
+            "meta": dict(meta),
+        }
+        self._touch_watermark()
+
+    def drop(self, site: str) -> None:
+        self._sites.pop(site, None)
+        self._touch_watermark()
+
+    def set_phase(self, phase: str) -> None:
+        """Enter a phase; its watermark starts from the current totals so a
+        phase with no subsequent ``set`` still records one."""
+        self.phase = str(phase)
+        self._touch_watermark()
+
+    def record_devices(self, *trees) -> None:
+        """Fold per-device resident bytes of ``trees`` (pytrees of jax
+        arrays) into the ledger's per-device breakdown."""
+        self.per_device = device_breakdown(*trees)
+
+    def _touch_watermark(self) -> None:
+        total = self.total()
+        wm = self._watermarks.get(self.phase)
+        if wm is None or total > wm["total_bytes"]:
+            self._watermarks[self.phase] = {
+                "total_bytes": total,
+                "sites": {n: s["bytes"] for n, s in self._sites.items()},
+            }
+
+    # ---- totals ---------------------------------------------------------
+    def get(self, site: str) -> int:
+        s = self._sites.get(site)
+        return 0 if s is None else s["bytes"]
+
+    def total(self, sites=None) -> int:
+        """Counted resident bytes (optionally restricted to ``sites``)."""
+        return sum(s["bytes"] for n, s in self._sites.items()
+                   if s["counted"] and (sites is None or n in sites))
+
+    def fp32_total(self, sites=None) -> int:
+        """fp32-dense shadow of the counted sites (shadow defaults to the
+        site's own bytes where none was declared)."""
+        return sum(s["fp32_bytes"] if s["fp32_bytes"] is not None
+                   else s["bytes"]
+                   for n, s in self._sites.items()
+                   if s["counted"] and (sites is None or n in sites))
+
+    def reduction_vs_fp32(self, sites=None) -> float:
+        """Live "reduction vs fp32-dense baseline" figure (Table 1 shape):
+        shadow bytes / resident bytes over the counted sites."""
+        t = self.total(sites)
+        return float(self.fp32_total(sites)) / t if t else 0.0
+
+    def watermark(self, phase: str) -> dict | None:
+        return self._watermarks.get(phase)
+
+    # ---- reconcile ------------------------------------------------------
+    def reconcile(self, tolerance: float = 0.02,
+                  live_bytes: int | None = None) -> dict:
+        """Check the counted total against the process's live arrays.
+
+        One-sided by design (see module docstring): the ledger must not
+        claim more resident bytes than actually live, modulo ``tolerance``
+        (covers declared-but-transient sites like activation edges)."""
+        if live_bytes is None:
+            live_bytes = sum(int(a.nbytes) for a in jax.live_arrays())
+        total = self.total()
+        ok = total <= live_bytes * (1.0 + tolerance)
+        return {
+            "ledger_bytes": int(total),
+            "live_bytes": int(live_bytes),
+            "tolerance": float(tolerance),
+            "coverage_frac": (total / live_bytes) if live_bytes else 0.0,
+            "ok": bool(ok),
+        }
+
+    # ---- summary --------------------------------------------------------
+    def summary(self) -> dict:
+        """JSON-friendly snapshot: sites, totals, the live reduction figure,
+        per-phase watermarks, and the per-device breakdown when recorded."""
+        sites = {}
+        for name, s in self._sites.items():
+            row = {"bytes": s["bytes"], "peak_bytes": s["peak_bytes"],
+                   "counted": s["counted"]}
+            if s["fp32_bytes"] is not None:
+                row["fp32_bytes"] = s["fp32_bytes"]
+            row.update(s["meta"])
+            sites[name] = row
+        out = {
+            "phase": self.phase,
+            "sites": sites,
+            "total_bytes": self.total(),
+            "fp32_total_bytes": self.fp32_total(),
+            "reduction_vs_fp32_x": self.reduction_vs_fp32(),
+            "watermarks": {p: dict(w) for p, w in self._watermarks.items()},
+        }
+        if self.per_device is not None:
+            out["per_device"] = dict(self.per_device)
+        return out
+
+
+def device_breakdown(*trees) -> dict[str, int]:
+    """Resident bytes per device across pytrees of jax arrays, summed from
+    ``addressable_shards`` (a replicated array contributes its full size on
+    every device — that is its real footprint)."""
+    out: dict[str, int] = {}
+    for tree in trees:
+        for leaf in jax.tree_util.tree_leaves(tree):
+            shards = getattr(leaf, "addressable_shards", None)
+            if shards is None:
+                continue
+            for sh in shards:
+                key = str(sh.device)
+                out[key] = out.get(key, 0) + int(sh.data.nbytes)
+    return out

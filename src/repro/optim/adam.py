@@ -134,6 +134,25 @@ def adam_update(params, grads, state: AdamState, lr: jax.Array,
     return params_out, AdamState(step, tuple(new_m), tuple(new_v))
 
 
+def moment_nbytes(state: AdamState) -> tuple[int, int]:
+    """(resident, fp32-shadow) bytes of the optimizer moments — the
+    ``optimizer_moment`` site of ``obs.ledger``.  QTensor moments count
+    codes + block scales as actually stored; the shadow is what the same
+    moments would cost as two f32 arrays per tracked parameter leaf."""
+    import math
+    resident = fp32 = 0
+    for mm in (*state.m, *state.v):
+        if mm is None:
+            continue
+        if isinstance(mm, QTensor):
+            resident += mm.nbytes()
+            fp32 += 4 * math.prod(mm.shape)
+        else:
+            resident += int(mm.nbytes)
+            fp32 += 4 * int(mm.size)
+    return resident, fp32
+
+
 def global_norm(grads) -> jax.Array:
     leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
               for g in jax.tree_util.tree_leaves(grads)

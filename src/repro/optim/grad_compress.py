@@ -37,11 +37,34 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..numerics import QuantSpec, roundtrip
+from ..numerics import QuantSpec, roundtrip, spec_nbytes
 from ..numerics.codecs import blockwise_geometry
 
 WIRE_SPEC = QuantSpec("blockwise", 8, 1024, "int8", "per_tensor_max")
 BLOCK = WIRE_SPEC.block
+
+
+def residual_nbytes(residual) -> int:
+    """Resident bytes of an error-feedback residual tuple (the
+    ``grad_residual`` site of ``obs.ledger``; None entries are non-float
+    leaves that carry no residual)."""
+    if residual is None:
+        return 0
+    return sum(int(r.nbytes) for r in residual if r is not None)
+
+
+def wire_nbytes(grads, spec: QuantSpec = WIRE_SPEC) -> tuple[int, int]:
+    """(encoded, fp32) bytes of one gradient all-reduce payload — the
+    ``dp_wire`` site of ``obs.ledger``.  Matches the codec's layout exactly:
+    each float leaf flattens and encodes blockwise (codes padded to a block
+    multiple + one f32 scale per block), which is what ``psum_int8`` puts
+    on the wire."""
+    enc = fp32 = 0
+    for g in jax.tree_util.tree_leaves(grads):
+        if hasattr(g, "dtype") and jnp.issubdtype(g.dtype, jnp.floating):
+            enc += spec_nbytes(spec, (int(g.size),))
+            fp32 += 4 * int(g.size)
+    return enc, fp32
 
 
 def compress_decompress(grads, residual, spec: QuantSpec = WIRE_SPEC):

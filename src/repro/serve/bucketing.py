@@ -53,6 +53,14 @@ class CompileCache:
     def keys(self) -> list:
         return list(self._live)
 
+    def site(self) -> dict:
+        """Ledger raw material for the ``compile_cache`` site.  XLA exposes
+        no portable executable-size API, so the site reports live-entry
+        count and eviction churn with bytes=0 — the *bound* (max_live) is
+        what keeps this site's real memory finite."""
+        return {"entries": len(self._live), "max_live": self._max,
+                "evictions": self.evictions}
+
     def get(self, key: tuple) -> Callable:
         fn = self._live.pop(key, None)
         if fn is None:

@@ -229,11 +229,22 @@ class Engine:
         self.metrics = ServeMetrics(clock=clock)
         self.metrics.num_slots = self.pcfg.num_slots
         self.metrics.cache_bytes = KC.pool_bytes(self.pool)
-        self.metrics.cache_bytes_fp32 = 4 * sum(
-            int(np.prod(a.shape))
-            for a in jax.tree_util.tree_leaves(self.pool["data"]))
+        self.metrics.cache_bytes_fp32 = KC.pool_bytes_fp32(self.pool)
         self.metrics.state_bytes = SC.pool_bytes(self.spool)
         self.metrics.state_bytes_fp32 = SC.pool_bytes_fp32(self.spool)
+        # live memory ledger (repro.obs): every resident site reports in.
+        # Pools are preallocated, so their byte totals are fixed at init;
+        # what moves per phase is the prefix overlay (logical vs physical
+        # mapped pages — the verified bytes behind ``pages_saved``) and the
+        # compile-cache population. Host-side only, like the trace.
+        from ..obs import MemoryLedger
+        self.ledger = MemoryLedger()
+        self._page_nbytes = (KC.page_nbytes(self.pool, self.pcfg)
+                             if self._attn_keys else 0)
+        self._params_nbytes = sum(
+            int(l.nbytes) for l in jax.tree_util.tree_leaves(self.params))
+        self._params_nbytes_fp32 = 4 * sum(
+            int(l.size) for l in jax.tree_util.tree_leaves(self.params))
         self._key = jax.random.PRNGKey(ecfg.seed)
         self._nsample = 0
         self._completions: dict[int, Completion] = {}
@@ -284,6 +295,7 @@ class Engine:
         self._fork_jit = jax.jit(self._fork_impl, donate_argnums=(0,))
         self._adopt_jit = jax.jit(self._adopt_impl, donate_argnums=(0,))
         self._sample_jit = jax.jit(sample_tokens)
+        self._ledger_update("init")
 
     # ---- jitted step bodies -------------------------------------------
     def _ckv(self, pool):
@@ -553,6 +565,43 @@ class Engine:
                 self._ckv({"data": new_data, "scale_log2": new_scale}),
                 self._cst({"data": new_sdata, "scale_log2": new_sscale}))
 
+    # ---- memory ledger -------------------------------------------------
+    def _ledger_update(self, phase: str | None = None) -> None:
+        """Refresh every serve-side ledger site (host ints only — never
+        called from a jitted body).  Counted sites are the real resident
+        allocations; the prefix pages are an *uncounted* overlay of
+        ``kv_pool`` (their bytes live inside the pool) whose logical-vs-
+        physical split turns page sharing into verified bytes."""
+        led = self.ledger
+        if phase is not None:
+            led.set_phase(phase)
+        led.set("params", self._params_nbytes,
+                fp32=self._params_nbytes_fp32)
+        led.set("kv_pool", self.metrics.cache_bytes,
+                fp32=self.metrics.cache_bytes_fp32)
+        led.set("state_pool", self.metrics.state_bytes,
+                fp32=self.metrics.state_bytes_fp32)
+        if self.sched.paged:
+            logical, physical = self.sched.mapped_page_stats()
+            pb = self._page_nbytes
+            led.set("prefix_pages_logical", logical * pb, counted=False,
+                    pages=logical)
+            led.set("prefix_pages_physical", physical * pb, counted=False,
+                    pages=physical)
+            led.set("prefix_bytes_saved", (logical - physical) * pb,
+                    counted=False)
+        if self._prefix is not None:
+            stats = self._prefix.bytes_stats(self._page_nbytes)
+            led.set("prefix_tree", stats["bytes"], counted=False,
+                    pages=stats["pages"], pages_pinned=stats["pages_pinned"],
+                    nodes=stats["nodes"])
+        cc = self._prefill_fns.site()
+        ch = self._chunk_fns.site()
+        led.set("compile_cache", 0, counted=False,
+                entries=cc["entries"] + ch["entries"],
+                max_live=cc["max_live"],
+                evictions=cc["evictions"] + ch["evictions"])
+
     # ---- request lifecycle --------------------------------------------
     def submit(self, prompt: list[int], max_new_tokens: int = 32,
                sampling: SamplingParams | None = None,
@@ -583,6 +632,7 @@ class Engine:
     def _do_prefill(self, slot: int, st) -> None:
         plen = st.prompt_len
         t0 = self.trace.clock() if self.trace is not None else 0.0
+        self._ledger_update("prefill")
         table = jnp.asarray(self.sched.page_table)
         stateful = bool(self._state_keys)
         if stateful:
@@ -772,6 +822,7 @@ class Engine:
                 self._finish(slot)
         self.metrics.decode_step(len(active_slots), free_pages=free_pages,
                                  dur=dur)
+        self._ledger_update("decode")
         if self.trace is not None:
             self.trace.emit("decode_step", step=self.metrics.decode_steps,
                             n_active=len(active_slots),
@@ -800,4 +851,15 @@ class Engine:
             self.metrics.prefix_evictions = self._prefix.evictions
         self.metrics.compile_evictions = (self._prefill_fns.evictions
                                           + self._chunk_fns.evictions)
-        return self.metrics.summary()
+        if self.trace is not None:
+            self.metrics.trace_dropped = self.trace.dropped
+        from ..obs import registry
+        self.metrics.counter_totals = registry.snapshot()
+        self._ledger_update()
+        if self.plan.mesh is not None:
+            self.ledger.record_devices(self.pool, self.spool, self.params)
+        out = self.metrics.summary()
+        mem = self.ledger.summary()
+        mem["reconcile"] = self.ledger.reconcile()
+        out["memory"] = mem
+        return out

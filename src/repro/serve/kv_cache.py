@@ -137,6 +137,26 @@ def pool_bytes(pool: dict) -> int:
     return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(pool))
 
 
+def pool_bytes_fp32(pool: dict) -> int:
+    """What the same pool's data would cost stored as f32 (scales excluded:
+    an fp32 pool carries none) — the denominator of the cache-reduction
+    figure and the ledger's ``kv_pool`` fp32 shadow."""
+    return 4 * sum(int(np.prod(a.shape))
+                   for a in jax.tree_util.tree_leaves(pool["data"]))
+
+
+def page_nbytes(pool: dict, pcfg: PoolConfig) -> int:
+    """Physical bytes of ONE page summed across every cached tensor of
+    every layer (data leaves are (L, P+1, page, *feat): each of the P+1
+    physical pages owns an equal 1/(P+1) slice).  Per-slot scale rows are
+    page-independent and excluded.  This is the unit that turns the page
+    table's logical-vs-physical mapped counts into verified bytes
+    (``obs.ledger``: ``prefix_bytes_saved``)."""
+    n = pcfg.total_pages + 1
+    return sum(leaf.nbytes // n
+               for leaf in jax.tree_util.tree_leaves(pool["data"]))
+
+
 # ---------------------------------------------------------------------------
 # Quantize / dequantize — the ``kv_cache`` site of the unified quantization
 # API (pow-2 codec of repro.numerics; same grid as core/quant.py)

@@ -8,14 +8,19 @@ everything into a JSON-friendly dict (the schema the throughput benchmark
 emits). The clock is injectable for deterministic tests.
 
 The timeline is the aggregate's raw material: one row per decode step
-(batch fill, free pages, step duration), kept as a plain list so benches
-can dump it next to the trace. TTFT is attributed into queue wait
-(submitted→admitted) and compute (admitted→first token) — the split that
-tells an operator whether to add capacity or speed up prefill.
+(batch fill, free pages, step duration), kept in a bounded ring buffer
+(like ``TraceRecorder``) so a long-running engine cannot grow host memory
+without bound — the aggregates (``batch_fill_mean``, ``free_pages_min``)
+are maintained as exact running values, so ``summary()`` is unaffected by
+rows the ring dropped (``timeline_dropped`` counts them). TTFT is
+attributed into queue wait (submitted→admitted) and compute
+(admitted→first token) — the split that tells an operator whether to add
+capacity or speed up prefill.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable
 
@@ -85,8 +90,21 @@ class ServeMetrics:
                                 # (SSM/RWKV sublayers; 0 for attn-only archs)
     state_bytes_fp32: int = 0   # fp32 cost of the same state pool
     # one row per decode step: {"t", "step", "n_active", "free_pages", "dur"}
-    timeline: list = field(default_factory=list)
+    # — a bounded ring (oldest rows dropped past capacity; aggregates stay
+    # exact via the running values below)
+    timeline_capacity: int = 65536
+    timeline: deque = None  # type: ignore[assignment]
+    timeline_dropped: int = 0
+    _free_min: int | None = None
+    # surfaced by the engine before summary(): trace-ring drops and the
+    # process CounterRegistry snapshot (codec fallbacks, kernel calls)
+    trace_dropped: int = 0
+    counter_totals: dict = field(default_factory=dict)
     _health: dict[str, _SiteHealth] = field(default_factory=dict)
+
+    def __post_init__(self):
+        if self.timeline is None:
+            self.timeline = deque(maxlen=self.timeline_capacity)
 
     # ---- lifecycle hooks ----------------------------------------------
     def _timing(self, rid: int) -> _ReqTiming:
@@ -124,6 +142,12 @@ class ServeMetrics:
                     dur: float | None = None) -> None:
         self.decode_steps += 1
         self.decode_tokens += n_active
+        if free_pages is not None:
+            self._free_min = free_pages if self._free_min is None \
+                else min(self._free_min, free_pages)
+        if self.timeline.maxlen is not None \
+                and len(self.timeline) == self.timeline.maxlen:
+            self.timeline_dropped += 1
         self.timeline.append({
             "t": self.clock(), "step": self.decode_steps,
             "n_active": n_active, "free_pages": free_pages, "dur": dur})
@@ -175,9 +199,11 @@ class ServeMetrics:
             else self._t_end
         wall = (t_end - self._t0) if self._t0 is not None else 0.0
         total_gen = sum(t.gen_len for t in done)
-        fills = [r["n_active"] for r in self.timeline]
-        frees = [r["free_pages"] for r in self.timeline
-                 if r["free_pages"] is not None]
+        # exact running aggregates — independent of timeline-ring drops:
+        # every decode_step added n_active to decode_tokens, so the mean
+        # fill is decode_tokens / decode_steps
+        fill_mean = (self.decode_tokens / self.decode_steps
+                     if self.decode_steps else 0.0)
         return {
             "requests_completed": len(done),
             "generated_tokens": total_gen,
@@ -201,10 +227,14 @@ class ServeMetrics:
             "ttft_queue_p50_s": _pct(ttft_queue, 50),
             "ttft_compute_p50_s": _pct(ttft_compute, 50),
             "latency_p50_s": _pct(lat, 50), "latency_p95_s": _pct(lat, 95),
-            "batch_fill_mean": _mean(fills),
-            "batch_fill_frac": (_mean(fills) / self.num_slots
+            "batch_fill_mean": fill_mean,
+            "batch_fill_frac": (fill_mean / self.num_slots
                                 if self.num_slots else 0.0),
-            "free_pages_min": int(min(frees)) if frees else 0,
+            "free_pages_min": int(self._free_min)
+                              if self._free_min is not None else 0,
+            "timeline_dropped": self.timeline_dropped,
+            "trace_dropped": self.trace_dropped,
+            "counter_totals": dict(self.counter_totals),
             "cache_bytes": self.cache_bytes,
             "cache_bytes_fp32": self.cache_bytes_fp32,
             "cache_reduction": (self.cache_bytes_fp32 / self.cache_bytes

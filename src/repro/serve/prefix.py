@@ -113,6 +113,18 @@ class RadixPrefixCache:
             return 1 + sum(count(c) for c in n.children.values())
         return count(self.root) - 1
 
+    def bytes_stats(self, page_nbytes: int) -> dict:
+        """Ledger raw material: how many physical pages the tree owns, how
+        many of those are pinned by live readers, and what they cost given
+        one page's bytes (``kv_cache.page_nbytes``).  Tree-owned pages live
+        inside the KV pool, so the ledger registers this as an *uncounted*
+        overlay of the ``kv_pool`` site."""
+        owned = list(self._owner)
+        pinned = sum(1 for p in owned if self.refs.count(p) > 0)
+        return {"pages": len(owned), "pages_pinned": pinned,
+                "bytes": len(owned) * int(page_nbytes),
+                "nodes": self.num_nodes()}
+
     # ---- matching -----------------------------------------------------
     def _tick(self, node: RadixNode) -> None:
         self._clock += 1

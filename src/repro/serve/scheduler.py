@@ -322,3 +322,23 @@ class Scheduler:
 
     def has_work(self) -> bool:
         return bool(self.queue) or any(s is not None for s in self.slots)
+
+    # ---- memory-ledger introspection ----------------------------------
+    def mapped_page_stats(self) -> tuple[int, int]:
+        """(logical, physical) mapped-page counts over live slots.
+
+        Logical counts every slot's mapped pages — a page shared by k
+        readers counts k times (what k independent engines would have
+        allocated); physical counts distinct page ids.  The difference is
+        the pages prefix sharing is saving *right now*: ``obs.ledger``
+        multiplies it by ``kv_cache.page_nbytes`` to turn the cumulative
+        ``pages_saved`` counter into a verified bytes figure."""
+        logical = 0
+        phys: set[int] = set()
+        for slot, st in enumerate(self.slots):
+            if st is None:
+                continue
+            row = self.slot_shared[slot] + self.slot_pages[slot]
+            logical += len(row)
+            phys.update(row)
+        return logical, len(phys)

@@ -14,7 +14,11 @@ every cache position a request owns.  After every op it checks:
   sentinel at every written position — a slot can never read another slot's
   pages (sentinels are unique per request);
 - **write isolation**: appends for inactive/retired slots land on the trash
-  page only (no other physical page changes).
+  page only (no other physical page changes);
+- **ledger conservation**: free + slot-private + tree-owned page bytes
+  partition the pool exactly (a real ``repro.obs.MemoryLedger`` instance),
+  and the logical/physical mapped-page stats reproduce the saved-bytes
+  truth recomputed from the slot lists.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -27,6 +31,42 @@ from repro.serve.scheduler import Request, Scheduler
 
 def _sentinel(rid: int) -> float:
     return float(rid % 10_000 + 1)
+
+
+def _check_ledger(sched: Scheduler, pcfg: PoolConfig, data,
+                  owned=frozenset()) -> None:
+    """Ledger conservation (repro.obs.MemoryLedger): after every op the
+    pool's bytes must partition exactly into free + slot-private +
+    tree-owned pages — no leaks, no double counting — and the scheduler's
+    ``mapped_page_stats`` must reproduce the saved-bytes truth recomputed
+    directly from the slot lists (the ``prefix_bytes_saved`` verified
+    figure the engine reports)."""
+    from repro.obs import MemoryLedger
+
+    pb = int(data.nbytes) // (pcfg.total_pages + 1)   # bytes per page
+    free = len(sched.alloc._free)
+    priv = sum(len(p) for p in sched.slot_pages)
+    led = MemoryLedger()
+    led.set("free_pages", free * pb)
+    led.set("private_pages", priv * pb)
+    led.set("tree_pages", len(owned) * pb)
+    assert led.total() == pcfg.total_pages * pb, \
+        (free, priv, len(owned), pcfg.total_pages)
+    logical, physical = sched.mapped_page_stats()
+    rows = [sched.slot_shared[s] + sched.slot_pages[s]
+            for s in range(pcfg.num_slots) if sched.slots[s] is not None]
+    assert logical == sum(len(r) for r in rows), (logical, rows)
+    union = set().union(*map(set, rows)) if rows else set()
+    assert physical == len(union), (physical, rows)
+    counts: dict[int, int] = {}
+    for r in rows:
+        for p in r:
+            counts[p] = counts.get(p, 0) + 1
+    saved_pages = sum(c - 1 for c in counts.values())
+    assert logical - physical == saved_pages, (logical, physical, counts)
+    # the verified bytes figure: overlay sites never enter the total
+    led.set("prefix_bytes_saved", saved_pages * pb, counted=False)
+    assert led.total() == pcfg.total_pages * pb
 
 
 def _check_accounting(sched: Scheduler, pcfg: PoolConfig) -> None:
@@ -139,6 +179,7 @@ def run_pool_walk(seed: int, steps: int = 40) -> None:
                 extent[evicted] = 0
 
         _check_accounting(sched, pcfg)
+        _check_ledger(sched, pcfg, data)
         _check_read_isolation(sched, pcfg, data, scale, extent)
     _check_write_isolation(sched, pcfg, data, scale)
 
@@ -253,6 +294,7 @@ def run_prefix_walk(seed: int, steps: int = 40) -> None:
                 del tree_content[p]
         _check_prefix_invariants(sched, prefix, pcfg, data, tree_content,
                                  expected)
+        _check_ledger(sched, pcfg, data, owned=prefix.owned_pages)
 
     for _ in range(steps):
         op = rng.choice(["submit", "admit", "decode", "retire", "preempt"])

@@ -1,0 +1,151 @@
+"""Unit tests for the live memory ledger (``repro.obs.ledger``), the
+bounded ServeMetrics timeline, and the bench-history regression gate
+(``benchmarks/history.py``) — plus the live-vs-analytic Table-1
+cross-check the CI telemetry gate asserts on the train-wire bench."""
+import importlib.util
+import json
+import pathlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.obs import MemoryLedger, device_breakdown
+
+
+def _load_bench(name: str):
+    p = (pathlib.Path(__file__).resolve().parent.parent
+         / "benchmarks" / f"{name}.py")
+    spec = importlib.util.spec_from_file_location(f"{name}_bench", p)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+class TestMemoryLedger:
+    def test_counted_and_overlay_sites(self):
+        led = MemoryLedger()
+        led.set("a", 100, fp32=400)
+        led.set("b", 50)
+        led.set("overlay", 30, counted=False)
+        assert led.total() == 150            # overlay never counted
+        assert led.fp32_total() == 450       # shadow defaults to own bytes
+        assert led.reduction_vs_fp32() == 3.0
+        assert led.total(("a",)) == 100
+        assert led.reduction_vs_fp32(("a",)) == 4.0
+        led.set("a", 80, fp32=400)           # idempotent overwrite
+        assert led.total() == 130 and led.get("a") == 80
+        s = led.summary()
+        assert s["sites"]["a"]["peak_bytes"] == 100   # peak survives shrink
+        assert s["sites"]["overlay"]["counted"] is False
+        led.drop("b")
+        assert led.total() == 80
+        json.dumps(led.summary())            # JSON-friendly throughout
+
+    def test_phase_watermarks(self):
+        led = MemoryLedger()
+        led.set("a", 100)
+        assert led.watermark("init")["total_bytes"] == 100
+        # entering a phase records a watermark even with no set() after
+        led.set_phase("decode")
+        assert led.watermark("decode")["total_bytes"] == 100
+        led.set("a", 40)                     # shrink: watermark holds
+        assert led.watermark("decode")["total_bytes"] == 100
+        led.set("a", 300)
+        wm = led.watermark("decode")
+        assert wm["total_bytes"] == 300 and wm["sites"]["a"] == 300
+        # earlier phase untouched
+        assert led.watermark("init")["total_bytes"] == 100
+        assert led.watermark("prefill") is None
+
+    def test_reconcile_one_sided(self):
+        led = MemoryLedger()
+        led.set("a", 100)
+        rec = led.reconcile(live_bytes=100)
+        assert rec["ok"] and rec["coverage_frac"] == 1.0
+        # claiming more than live means a stale/double-counted site
+        assert not led.reconcile(live_bytes=50)["ok"]
+        # overlays never tip the reconcile
+        led.set("overlay", 10**9, counted=False)
+        assert led.reconcile(live_bytes=100)["ok"]
+
+    def test_device_breakdown(self):
+        x = jnp.zeros((4, 8), jnp.float32)
+        per = device_breakdown({"x": x}, [x])
+        assert len(per) >= 1
+        assert sum(per.values()) == 2 * x.nbytes
+
+
+class TestMetricsTimeline:
+    def test_ring_bounded_aggregates_exact(self):
+        from repro.serve.metrics import ServeMetrics
+        m = ServeMetrics(clock=lambda: 0.0, timeline_capacity=4)
+        fills = [1, 2, 3, 4, 3, 2, 1, 4]
+        for n in fills:
+            m.decode_step(n, free_pages=8 - n)
+        # the ring is bounded and counts its drops...
+        assert len(m.timeline) == 4
+        assert m.timeline_dropped == len(fills) - 4
+        # ...while the aggregates stay exact over ALL steps
+        s = m.summary()
+        assert s["batch_fill_mean"] == pytest.approx(float(np.mean(fills)))
+        assert s["free_pages_min"] == 8 - max(fills)
+        assert s["decode_steps"] == len(fills)
+        assert s["timeline_dropped"] == 4
+        assert "trace_dropped" in s and "counter_totals" in s
+        json.dumps(s)
+
+
+class TestHistoryGate:
+    DOC = {"bench": "train_wire", "reduction_x": 20.0,
+           "step_ms_low_precision": 50.0,
+           "memory": {"table1_live_reduction_x": 20.0}}
+
+    def test_append_and_gate(self, tmp_path):
+        H = _load_bench("history")
+        path = str(tmp_path / "hist.jsonl")
+        e1 = H.append_entry(self.DOC, path, sha="aaa", timestamp="t0")
+        assert e1["metrics"]["reduction_x"] == 20.0
+        e2 = H.append_entry(self.DOC, path, sha="bbb", timestamp="t1")
+        assert H.check_regression(e2, [e1]) == []
+        assert H.gate(path) == []
+        # 5% band on the deterministic memory metric: a 15% drop fails
+        bad = dict(self.DOC, reduction_x=17.0,
+                   memory={"table1_live_reduction_x": 17.0})
+        e3 = H.append_entry(bad, path, sha="ccc", timestamp="t2")
+        fails = H.check_regression(e3, [e1, e2])
+        assert any("reduction_x" in f for f in fails)
+        assert H.gate(path) != []            # newest entry regressed
+
+    def test_throughput_band_is_loose(self):
+        H = _load_bench("history")
+        e_ok = {"bench": "train_wire",
+                "metrics": H.extract_metrics(
+                    dict(self.DOC, step_ms_low_precision=90.0))}
+        prior = [{"bench": "train_wire",
+                  "metrics": H.extract_metrics(self.DOC)}]
+        # +80% step time sits inside the 2x wall-clock band...
+        assert H.check_regression(e_ok, prior) == []
+        # ...a >2x blowup does not
+        e_bad = {"bench": "train_wire",
+                 "metrics": H.extract_metrics(
+                     dict(self.DOC, step_ms_low_precision=150.0))}
+        fails = H.check_regression(e_bad, prior)
+        assert any("step_ms_low_precision" in f for f in fails)
+
+
+def test_train_wire_live_matches_analytic():
+    """The ISSUE's CI cross-check: the live ledger built from the step's
+    actual artifacts must agree with the analytic site table within 10%
+    and clear the paper's 8x floor."""
+    TW = _load_bench("train_wire")
+    low = TW.fmnist_low_precision_step(32)
+    sites, baseline, deploy = TW.fmnist_site_table(low)
+    led = TW.live_memory_ledger(low, deploy, baseline)
+    live = led.reduction_vs_fp32(TW.TABLE1_SITES)
+    analytic = sum(baseline.values()) / sum(sites.values())
+    assert live >= 8
+    assert abs(live - analytic) <= 0.1 * analytic
+    assert led.total(TW.TABLE1_SITES) == sum(sites.values())
+    assert led.reconcile()["ok"]
+    assert led.watermark("train_step")["total_bytes"] == led.total()

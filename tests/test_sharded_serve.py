@@ -96,7 +96,17 @@ elif CASE == "prefix":
     assert got == ref, (got, ref)
     assert s["prefix_hit_tokens"] > 0 and s["cow_forks"] > 0, s
     assert s["prefill_tokens"] == s["prompt_tokens"] - s["prefix_hit_tokens"]
-    print("OK prefix hits", s["prefix_hit_tokens"], "forks", s["cow_forks"])
+    # memory ledger on the sharded path: reconciled totals and a per-device
+    # breakdown covering all 8 forced devices, each holding at least the
+    # pool bytes the engine reports for it
+    mem = s["memory"]
+    assert mem["reconcile"]["ok"], mem["reconcile"]
+    assert mem["sites"]["prefix_bytes_saved"]["peak_bytes"] > 0, mem["sites"]
+    per_dev = mem["per_device"]
+    assert len(per_dev) == 8, per_dev
+    assert sum(per_dev.values()) >= mem["sites"]["kv_pool"]["bytes"], per_dev
+    print("OK prefix hits", s["prefix_hit_tokens"], "forks", s["cow_forks"],
+          "ledger devices", len(per_dev))
 
 elif CASE == "dp_train":
     from jax.sharding import PartitionSpec as P
