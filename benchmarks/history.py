@@ -119,6 +119,17 @@ GATES: dict[str, list[dict]] = {
              get=lambda d: _max_over(c.get("decode_tokens_per_s")
                                      for c in _cells(d, impl="fused"))),
     ],
+    "spec_decode": [
+        # acceptance with a fixed-seed draft is deterministic modulo
+        # borderline accept-test flips across BLAS backends -> 10%
+        dict(metric="acceptance_rate_best", dir="higher", tol=0.1,
+             get=lambda d: d.get("acceptance_rate_best")),
+        dict(metric="tokens_per_step_best", dir="higher", tol=0.1,
+             get=lambda d: d.get("tokens_per_step_best")),
+        dict(metric="tokens_per_s_spec", dir="higher", tol=0.5,
+             get=lambda d: _max_over(c.get("tokens_per_s")
+                                     for c in _cells(d, mode="spec"))),
+    ],
 }
 
 

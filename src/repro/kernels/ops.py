@@ -165,9 +165,12 @@ def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
                     lens: jax.Array, *, page_size: int, quantized: bool,
                     impl: str = "auto", page_chunk: int | None = None,
                     plan=None) -> jax.Array:
-    """Fused paged-attention decode: per-page int8 dequant + online-softmax
+    """Fused paged attention: per-page int8 dequant + online-softmax
     attention over each slot's page list (never materializes the fp32 slot
-    view). See ``kernels/paged_attention.py`` for layouts.
+    view). q is (B, Hq, Dh) for single-token decode or (B, S, Hq, Dh) for a
+    q-block (chunked prefill / k-token speculative verify); ``lens`` is the
+    position of the first query row either way. See
+    ``kernels/paged_attention.py`` for layouts.
 
     impl: "pallas" (the kernel; compiled on TPU, interpret elsewhere),
     "jnp" (the same dataflow as a page-scan in XLA), or "auto" — the kernel
@@ -204,18 +207,22 @@ def paged_attention(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
                           page_chunk=page_chunk)
     hkv = kdata.shape[2]
     if plan is not None and plan.shards_kv_heads(hkv) \
-            and q.shape[1] % hkv == 0:
+            and q.shape[-2] % hkv == 0:
         from jax.sharding import PartitionSpec as P
 
         from ..sharding import compat_shard_map
+        # q's head axis is -2 in both ranks: (B, Hq, Dh) decode or
+        # (B, S, Hq, Dh) q-block
+        qspec = (P(None, "model", None) if q.ndim == 3
+                 else P(None, None, "model", None))
         f = compat_shard_map(
             f, plan.mesh,
-            in_specs=(P(None, "model", None),          # q (B, Hq, Dh)
+            in_specs=(qspec,                           # q
                       P(None, None, "model", None),    # k pages
                       P(None, None, "model", None),    # v pages
                       P(None), P(None),                # per-slot scales
                       P(None, None), P(None)),         # table, lens
-            out_specs=P(None, "model", None))
+            out_specs=qspec)
     return f(q, kdata, vdata, kscale, vscale, table, lens)
 
 

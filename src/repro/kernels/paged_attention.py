@@ -1,4 +1,4 @@
-"""Fused paged-attention decode kernel with in-kernel int8 dequantization.
+"""Fused paged-attention q-block kernel with in-kernel int8 dequantization.
 
 The serve engine's hottest path used to gather every slot's *entire*
 dequantized cache view (``kv_cache.gather_slots``: (B, max_len, *feat) fp32
@@ -10,6 +10,11 @@ low-precision storage only pays off when dequantization lives inside the
 compute path; Tian et al. 2501.06663 make the same argument for transformer
 attention caches).
 
+The walk carries a q-block: S query rows per slot at consecutive positions
+``lens[b] .. lens[b] + S - 1`` with a per-row causal length mask, so ONE
+kernel serves single-token decode (S=1, the original dataflow), chunked
+prefill (S=chunk), and k-token speculative verification (S=k+1).
+
 Two implementations of the same dataflow:
 
 - ``paged_attention_kernel``: the Pallas kernel.  Grid ``(num_slots,
@@ -17,25 +22,27 @@ Two implementations of the same dataflow:
   operands — the BlockSpec index map chases the slot's page pointers, so
   each grid step DMAs exactly one int8 K and V page into VMEM, dequantizes
   with the slot's pow-2 scale in-register, and folds the page into the
-  (m, l, acc) online-softmax state held in VMEM scratch.  Grid steps for
-  pages entirely above ``lens[slot]`` are predicated out (``pl.when``): a
-  fully-masked page is the exact identity update, so short slots in a
-  ragged batch skip their tail pages' dequant + MXU work for free (the
-  grid is sized by ``pages_per_slot``, i.e. the longest possible slot).
-  Runs compiled on TPU; in interpret mode everywhere else (the
-  differential-test oracle mode — see tests/test_paged_attention.py).
+  (m, l, acc) online-softmax state (now q-tiled: (S, Hq, ...)) held in VMEM
+  scratch.  Grid steps for pages entirely above the block's LAST row
+  (``lens[slot] + S - 1``) are predicated out (``pl.when``): a fully-masked
+  page is the exact identity update, so short slots in a ragged batch skip
+  their tail pages' dequant + MXU work for free (the grid is sized by
+  ``pages_per_slot``, i.e. the longest possible slot).  Runs compiled on
+  TPU; in interpret mode everywhere else (the differential-test oracle mode
+  — see tests/test_paged_attention.py).
 - ``paged_attention_jnp``: the identical page-walk written as a
   ``jax.lax.scan`` over pages in plain jnp.  Same per-page dequant, same
   online-softmax update order, so it is bit-locked against the kernel (the
   tests assert exact equality).  It is the engine's fused path off-TPU,
   where interpret-mode grid iteration would serialize poorly.
 
-Numerics contract: per slot the computation is softmax(q·K^T * scale,
-masked to ``pos <= lens[slot]``) @ V with KV heads expanded to the query
-head count — the same math as ``gather_slots`` + ``models/attention.py::
-gqa_attend``, evaluated in f32 with an online (per-page) softmax instead of
-a full-T one.  Greedy decode is token-identical to the gather path; logits
-agree to float-roundoff (asserted differentially).
+Numerics contract: per slot, query row j computes softmax(q_j·K^T * scale,
+masked to ``pos <= lens[slot] + j``) @ V with KV heads expanded to the
+query head count — the same math as ``gather_slots`` + ``models/attention
+.py::gqa_attend`` with ``qpos = lens[slot] + j``, evaluated in f32 with an
+online (per-page) softmax instead of a full-T one.  Greedy decode is
+token-identical to the gather path; logits agree to float-roundoff
+(asserted differentially).
 
 Head-sharding contract: every head is independent (GQA groups the query
 heads contiguously per KV head), so when the pool's KV-head axis is sharded
@@ -48,14 +55,16 @@ mesh-aware; the table/lens operands are replicated and page ids are global
 
 Layouts (one attention sublayer, one layer of the scanned stack):
 
-- q:        (B, Hq, Dh)   f32 — one decode query per slot
+- q:        (B, S, Hq, Dh) f32 — S-row q-block per slot; a rank-3
+            (B, Hq, Dh) q is accepted as the S=1 decode case and the
+            result is returned rank-3 to match
 - k/v data: (P+1, page, Hkv, Dh) int8 codes (quantized pool) or fp values;
             row ``P`` is the trash page absorbing inactive-slot writes
 - scale:    (B,) f32 per-slot ``scale_log2`` (pow-2 grid, kv_cache site)
 - table:    (B, pages_per_slot) int32 physical page ids (trash when unmapped)
-- lens:     (B,) int32 position of the incoming token (keys at pos <= lens
-            attend; unmapped pages sit entirely above lens, so the mask also
-            excludes trash-page junk for active slots)
+- lens:     (B,) int32 position of the FIRST query row (row j attends keys
+            at pos <= lens + j; unmapped pages sit entirely above the last
+            row, so the mask also excludes trash-page junk for active slots)
 
 TPU alignment note: compiled runs want Dh a multiple of 128 and page a
 multiple of 8 (f32 sublane); the interpret path takes any shape.  The
@@ -76,36 +85,46 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _expand_kv(x: jax.Array, groups: int) -> jax.Array:
-    """(page, Hkv, Dh) -> (page, Hkv*groups, Dh), repeating each KV head
-    ``groups`` times consecutively (matches ``gqa_attend``'s (hkv, g) query
-    grouping; broadcast+reshape instead of jnp.repeat for TPU lowering)."""
-    if groups == 1:
-        return x
-    pg, hkv, dh = x.shape
-    return jnp.broadcast_to(x[:, :, None, :], (pg, hkv, groups, dh)).reshape(
-        pg, hkv * groups, dh)
+def _norm_q(q: jax.Array):
+    """Accept (B, Hq, Dh) [legacy S=1 decode] or (B, S, Hq, Dh); return the
+    rank-4 view plus whether to squeeze the S axis back out of the result."""
+    if q.ndim == 3:
+        return q[:, None], True
+    if q.ndim == 4:
+        return q, False
+    raise ValueError(f"q must be rank 3 or 4, got {q.shape}")
 
 
-def _online_update(m, l, acc, s, v):
-    """One online-softmax step: fold scores s (Hq, page) and values
-    v (page, Hq, Dh) into the running (m (Hq,1), l (Hq,1), acc (Hq,Dh))."""
-    m_new = jnp.maximum(m, jnp.max(s, axis=1, keepdims=True))
+def _block_update(m, l, acc, qf, k, v, base_pos, limit, scale):
+    """One online-softmax step, shared VERBATIM by the Pallas kernel body
+    (b=1, one page) and the jnp page-scan (full batch, a chunk of pages) —
+    identical einsum shapes modulo the batch/page-chunk dims, which the
+    CPU/interpret lowering treats as outer loops, is what keeps the two
+    implementations bitwise-locked.
+
+    qf: (b, S, Hkv, g, Dh) f32 queries in the grouped-head layout; k/v:
+    (b, cp, Hkv, Dh) f32 (already dequantized, ``cp`` key positions
+    starting at ``base_pos``); limit: (b, S) per-row causal limits (row j
+    attends pos <= limit[:, j]); m/l: (b, S, Hq, 1); acc: (b, S, Hq, Dh).
+    KV heads are never expanded: scores and values use grouped einsums over
+    the (Hkv, g) query layout."""
+    b, sq, hkv, g, dh = qf.shape
+    cp = k.shape[1]
+    hq = hkv * g
+    s = jnp.einsum("bshgd,bphd->bshgp", qf, k,
+                   preferred_element_type=jnp.float32) * scale
+    pos = base_pos + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, 1, cp), 4)
+    s = jnp.where(pos <= limit[:, :, None, None, None], s, NEG_INF)
+    s = s.reshape(b, sq, hq, cp)
+    m_new = jnp.maximum(m, jnp.max(s, axis=3, keepdims=True))
     p = jnp.exp(s - m_new)
     corr = jnp.exp(m - m_new)
-    l_new = l * corr + jnp.sum(p, axis=1, keepdims=True)
-    acc_new = acc * corr + jnp.einsum("hp,phd->hd", p, v,
-                                      preferred_element_type=jnp.float32)
+    l_new = l * corr + jnp.sum(p, axis=3, keepdims=True)
+    acc_new = acc * corr + jnp.einsum(
+        "bshgp,bphd->bshgd", p.reshape(b, sq, hkv, g, cp), v,
+        preferred_element_type=jnp.float32).reshape(b, sq, hq, dh)
     return m_new, l_new, acc_new
-
-
-def _page_scores(q, k, page_idx, page_size, length, scale):
-    """Masked scores of one page. q (Hq, Dh) f32, k (page, Hq, Dh) f32."""
-    s = jnp.einsum("hd,phd->hp", q, k,
-                   preferred_element_type=jnp.float32) * scale
-    pos = page_idx * page_size + jax.lax.broadcasted_iota(
-        jnp.int32, (1, page_size), 1)
-    return jnp.where(pos <= length, s, NEG_INF)
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +133,7 @@ def _page_scores(q, k, page_idx, page_size, length, scale):
 
 def _pa_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
                m_ref, l_ref, acc_ref, *, page_size: int, num_pages: int,
-               quantized: bool, scale: float, groups: int):
+               quantized: bool, scale: float, groups: int, q_rows: int):
     b, p = pl.program_id(0), pl.program_id(1)
 
     @pl.when(p == 0)
@@ -123,17 +142,18 @@ def _pa_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # per-slot early exit: pages whose first position sits above the slot's
-    # incoming token carry no attendable keys — every score would mask to
-    # NEG_INF, making the online-softmax update the exact identity
-    # (m_new = m, corr = 1, p = exp(NEG_INF - m) = 0), so predicating the
-    # whole update out is bitwise-free and skips the dequant + MXU work for
-    # short slots in a long-slot batch (the grid is sized by the longest).
-    @pl.when(p * page_size <= lens_ref[b])
+    # per-slot early exit: pages whose first position sits above the LAST
+    # q-block row (lens + S - 1) carry no attendable keys — every score
+    # would mask to NEG_INF, making the online-softmax update the exact
+    # identity (m_new = m, corr = 1, p = exp(NEG_INF - m) = 0), so
+    # predicating the whole update out is bitwise-free and skips the dequant
+    # + MXU work for short slots in a long-slot batch (the grid is sized by
+    # the longest).
+    @pl.when(p * page_size <= lens_ref[b] + (q_rows - 1))
     def _update():
-        q = q_ref[0].astype(jnp.float32)                # (Hq, Dh)
-        k = k_ref[0]                                    # (page, Hkv, Dh)
-        v = v_ref[0]
+        q = q_ref[0].astype(jnp.float32)                # (S, Hq, Dh)
+        k = k_ref[...]                                  # (1, page, Hkv, Dh)
+        v = v_ref[...]
         if quantized:
             # in-kernel pow-2 dequant: one multiply per element, straight
             # from the int8 page in VMEM — no fp32 page ever round-trips
@@ -143,14 +163,17 @@ def _pa_kernel(tab_ref, lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
         else:
             k = k.astype(jnp.float32)
             v = v.astype(jnp.float32)
-        kx = _expand_kv(k, groups)
-        vx = _expand_kv(v, groups)
-        s = _page_scores(q, kx, p, page_size, lens_ref[b], scale)
-        m_new, l_new, acc_new = _online_update(m_ref[...], l_ref[...],
-                                               acc_ref[...], s, vx)
-        m_ref[...] = m_new
-        l_ref[...] = l_new
-        acc_ref[...] = acc_new
+        sq, hq, dh = q.shape
+        hkv = k.shape[2]
+        qf = q.reshape(1, sq, hkv, groups, dh)
+        limit = lens_ref[b] + jax.lax.broadcasted_iota(
+            jnp.int32, (1, sq), 1)
+        m_new, l_new, acc_new = _block_update(
+            m_ref[...][None], l_ref[...][None], acc_ref[...][None],
+            qf, k, v, p * page_size, limit, scale)
+        m_ref[...] = m_new[0]
+        l_ref[...] = l_new[0]
+        acc_ref[...] = acc_new[0]
 
     @pl.when(p == num_pages - 1)
     def _emit():
@@ -164,8 +187,9 @@ def paged_attention_kernel(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
                            page_size: int, quantized: bool,
                            interpret: bool = False) -> jax.Array:
     """Fused paged attention via Pallas. Shapes per module docstring;
-    returns (B, Hq, Dh) in q.dtype."""
-    b, hq, dh = q.shape
+    returns (B, S, Hq, Dh) in q.dtype ((B, Hq, Dh) for rank-3 q)."""
+    q, squeeze = _norm_q(q)
+    b, sq, hq, dh = q.shape
     pp = table.shape[1]
     hkv = kdata.shape[2]
     assert hq % hkv == 0, (hq, hkv)
@@ -173,7 +197,8 @@ def paged_attention_kernel(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
         num_scalar_prefetch=2,              # page table + length vector
         grid=(b, pp),
         in_specs=[
-            pl.BlockSpec((1, hq, dh), lambda bi, pi, tab, ln: (bi, 0, 0)),
+            pl.BlockSpec((1, sq, hq, dh),
+                         lambda bi, pi, tab, ln: (bi, 0, 0, 0)),
             # the page-pointer chase: block (pi of slot bi) is physical page
             # tab[bi, pi] — unmapped entries point at the trash page, whose
             # positions all sit above lens[bi] and mask to NEG_INF
@@ -184,24 +209,25 @@ def paged_attention_kernel(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
             pl.BlockSpec(memory_space=pltpu.SMEM),
             pl.BlockSpec(memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((1, hq, dh),
-                               lambda bi, pi, tab, ln: (bi, 0, 0)),
+        out_specs=pl.BlockSpec((1, sq, hq, dh),
+                               lambda bi, pi, tab, ln: (bi, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((hq, 1), jnp.float32),           # running max
-            pltpu.VMEM((hq, 1), jnp.float32),           # running denom
-            pltpu.VMEM((hq, dh), jnp.float32),          # running numerator
+            pltpu.VMEM((sq, hq, 1), jnp.float32),       # running max
+            pltpu.VMEM((sq, hq, 1), jnp.float32),       # running denom
+            pltpu.VMEM((sq, hq, dh), jnp.float32),      # running numerator
         ],
     )
     kern = functools.partial(
         _pa_kernel, page_size=page_size, num_pages=pp, quantized=quantized,
-        scale=1.0 / math.sqrt(dh), groups=hq // hkv)
-    return pl.pallas_call(
+        scale=1.0 / math.sqrt(dh), groups=hq // hkv, q_rows=sq)
+    out = pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((b, hq, dh), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((b, sq, hq, dh), q.dtype),
         interpret=interpret,
     )(table, lens, q, kdata, vdata,
       jnp.asarray(kscale, jnp.float32), jnp.asarray(vscale, jnp.float32))
+    return out[:, 0] if squeeze else out
 
 
 # ---------------------------------------------------------------------------
@@ -213,16 +239,17 @@ def paged_attention_jnp(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
                         table: jax.Array, lens: jax.Array, *,
                         page_size: int, quantized: bool,
                         page_chunk: int = 1) -> jax.Array:
-    """Page-walk online-softmax attention as a ``lax.scan`` over the page
-    axis, in plain jnp.  Per step it loads ``page_chunk`` int8 pages per
-    slot, dequantizes, and folds them into the (m, l, acc) state.  With
+    """Page-walk online-softmax q-block attention as a ``lax.scan`` over the
+    page axis, in plain jnp.  Per step it loads ``page_chunk`` int8 pages
+    per slot, dequantizes, and folds them into the (m, l, acc) state.  With
     ``page_chunk=1`` this is the kernel's exact per-page update order (the
     bit-lock the differential tests assert); larger chunks amortize the
     scan's dispatch overhead on non-TPU backends while peak residency stays
     bounded by the chunk — the (B, max_len, *feat) fp32 slot view is never
     materialized either way.  KV heads are never expanded: scores and
     values use grouped einsums over the (Hkv, g) query layout."""
-    b, hq, dh = q.shape
+    q, squeeze = _norm_q(q)
+    b, sq, hq, dh = q.shape
     pp = table.shape[1]
     hkv = kdata.shape[2]
     g = hq // hkv
@@ -240,9 +267,11 @@ def paged_attention_jnp(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
         trash = kdata.shape[0] - 1
         table = jnp.pad(table, ((0, 0), (0, nsteps * c - pp)),
                         constant_values=trash)
-    qf = q.astype(jnp.float32).reshape(b, hkv, g, dh)
+    qf = q.astype(jnp.float32).reshape(b, sq, hkv, g, dh)
     ks = jnp.exp2(jnp.asarray(kscale, jnp.float32))
     vs = jnp.exp2(jnp.asarray(vscale, jnp.float32))
+    # per-row causal limits: row j of the q-block attends pos <= lens + j
+    limit = lens[:, None] + jnp.arange(sq)[None, :]         # (B, S)
 
     def body(carry, step):
         m, l, acc = carry
@@ -257,23 +286,12 @@ def paged_attention_jnp(q: jax.Array, kdata: jax.Array, vdata: jax.Array,
             v = v.astype(jnp.float32)
         k = k.reshape(b, c * page_size, hkv, dh)
         v = v.reshape(b, c * page_size, hkv, dh)
-        s = jnp.einsum("bhgd,bphd->bhgp", qf, k,
-                       preferred_element_type=jnp.float32) * scale
-        pos = step * (c * page_size) + jnp.arange(c * page_size)
-        s = jnp.where(pos[None, None, None, :] <= lens[:, None, None, None],
-                      s, NEG_INF)
-        s = s.reshape(b, hq, c * page_size)
-        m_new = jnp.maximum(m, jnp.max(s, axis=2, keepdims=True))
-        p = jnp.exp(s - m_new)
-        corr = jnp.exp(m - m_new)
-        l_new = l * corr + jnp.sum(p, axis=2, keepdims=True)
-        acc_new = acc * corr + jnp.einsum(
-            "bhgp,bphd->bhgd", p.reshape(b, hkv, g, c * page_size), v,
-            preferred_element_type=jnp.float32).reshape(b, hq, dh)
-        return (m_new, l_new, acc_new), None
+        return _block_update(m, l, acc, qf, k, v, step * (c * page_size),
+                             limit, scale), None
 
-    m0 = jnp.full((b, hq, 1), NEG_INF, jnp.float32)
-    l0 = jnp.zeros((b, hq, 1), jnp.float32)
-    a0 = jnp.zeros((b, hq, dh), jnp.float32)
+    m0 = jnp.full((b, sq, hq, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, sq, hq, 1), jnp.float32)
+    a0 = jnp.zeros((b, sq, hq, dh), jnp.float32)
     (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nsteps))
-    return (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    out = (acc / jnp.maximum(l, 1e-30)).astype(q.dtype)
+    return out[:, 0] if squeeze else out

@@ -7,6 +7,7 @@ from .engine import Completion, Engine, EngineConfig  # noqa: F401
 from .kv_cache import PageRefs, PoolConfig, init_pool, pool_bytes  # noqa: F401
 from .metrics import ServeMetrics  # noqa: F401
 from .prefix import PrefixMatch, RadixPrefixCache  # noqa: F401
-from .sampling import SamplingParams, sample_tokens  # noqa: F401
+from .sampling import (SamplingParams, processed_probs,  # noqa: F401
+                       sample_from_probs, sample_tokens, spec_accept)
 from .scheduler import Request, Scheduler  # noqa: F401
 from .state_cache import StateCacheConfig, init_state_pool  # noqa: F401

@@ -59,7 +59,8 @@ from .bucketing import CompileCache, bucket_len
 from .kv_cache import PoolConfig
 from .metrics import ServeMetrics
 from .prefix import RadixPrefixCache
-from .sampling import SamplingParams, sample_tokens
+from .sampling import (SamplingParams, processed_probs, sample_from_probs,
+                       sample_tokens, spec_accept)
 from .scheduler import Request, Scheduler
 
 
@@ -110,6 +111,16 @@ class EngineConfig:
                                 # prompt length instead of the visible
                                 # chunk, so chunked prefill routes like
                                 # whole-prompt at capacity-bound loads
+    spec_k: int = 0             # speculative decoding: draft tokens
+                                # proposed per step (0: off). Needs a draft
+                                # model (Engine(..., draft=(lm, params)));
+                                # the target verifies all k+1 positions in
+                                # ONE q-block kernel call and rejection
+                                # sampling accepts a prefix — greedy
+                                # spec-decode is token-identical to
+                                # non-speculative greedy. Attention-only
+                                # draft AND target (recurrent state cannot
+                                # roll back a rejected token)
 
 
 # ---------------------------------------------------------------------------
@@ -147,7 +158,7 @@ class Engine:
 
     def __init__(self, lm: LMDef, params, ecfg: EngineConfig,
                  plan: ShardPlan | None = None, clock=time.monotonic,
-                 trace=None):
+                 trace=None, draft=None):
         cfg = lm.cfg
         if cfg.is_encoder:
             raise NotImplementedError("encoder-only archs have no decode path")
@@ -295,6 +306,73 @@ class Engine:
         self._fork_jit = jax.jit(self._fork_impl, donate_argnums=(0,))
         self._adopt_jit = jax.jit(self._adopt_impl, donate_argnums=(0,))
         self._sample_jit = jax.jit(sample_tokens)
+        # ---- speculative decoding (ecfg.spec_k > 0) --------------------
+        if ecfg.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0, got {ecfg.spec_k}")
+        self._spec = ecfg.spec_k > 0
+        if self._spec and draft is None:
+            raise ValueError("spec_k > 0 needs a draft model: "
+                             "Engine(..., draft=(draft_lm, draft_params))")
+        if self._spec:
+            dlm, dparams = draft
+            if self._state_keys:
+                raise NotImplementedError(
+                    "speculative decoding needs an attention-only TARGET: "
+                    "recurrent state advanced through a rejected draft "
+                    "token cannot be rolled back")
+            for sub in dlm.period:
+                if sub.mixer_kind not in ("attn_gqa", "attn_mla"):
+                    raise NotImplementedError(
+                        "speculative decoding needs an attention-only "
+                        f"DRAFT (got mixer {sub.mixer_kind!r})")
+            if dlm.cfg.vocab_size != cfg.vocab_size:
+                raise ValueError(
+                    f"draft vocab {dlm.cfg.vocab_size} != target vocab "
+                    f"{cfg.vocab_size}")
+            if self.plan.mesh is not None:
+                raise NotImplementedError(
+                    "draft-model sharding is an open roadmap item — run "
+                    "speculative decoding mesh-less")
+            self._draft = dlm
+            self._draft_params = dparams
+            self._draft_attn_keys = tuple(
+                f"sub_{i}" for i, _ in enumerate(dlm.period))
+            # the draft pool mirrors the target's geometry/numerics but
+            # shares nothing: a STATIC identity page table (slot i owns
+            # pages i*pp .. (i+1)*pp-1) removes every allocator interplay —
+            # draft-side rollback is just the length vector not advancing,
+            # and junk K/V above a slot's length is masked by the same
+            # causal length mask as on the target side
+            self._draft_pcfg = dataclasses.replace(self.pcfg, num_pages=0)
+            self._draft_pool = KC.init_pool(dlm, self._draft_pcfg)
+            pp = self._draft_pcfg.pages_per_slot
+            self._draft_table = jnp.asarray(
+                np.arange(self.pcfg.num_slots * pp,
+                          dtype=np.int32).reshape(self.pcfg.num_slots, pp))
+            self._draft_pool_bytes = KC.pool_bytes(self._draft_pool)
+            self._draft_pool_bytes_fp32 = KC.pool_bytes_fp32(self._draft_pool)
+            self._draft_params_nbytes = sum(
+                int(l.nbytes) for l in jax.tree_util.tree_leaves(dparams))
+            self._draft_params_nbytes_fp32 = 4 * sum(
+                int(l.size) for l in jax.tree_util.tree_leaves(dparams))
+
+            def make_draft_prefill(length):
+                def dprefill(params, tokens, valid_len):
+                    mask = (jnp.arange(tokens.shape[1]) < valid_len)[None]
+                    _, _, cache = lm_forward(params, dlm, self.plan,
+                                             tokens=tokens,
+                                             return_cache=True,
+                                             token_mask=mask)
+                    return cache
+                return jax.jit(dprefill)
+
+            self._draft_prefill_fns = CompileCache(
+                make_draft_prefill, max_live=ecfg.max_prefill_shapes)
+            self._draft_propose_jit = jax.jit(self._draft_propose_impl,
+                                              donate_argnums=(1,))
+            self._verify_jit = jax.jit(self._verify_impl,
+                                       donate_argnums=(1,))
+            self._accept_jit = jax.jit(spec_accept)
         self._ledger_update("init")
 
     # ---- jitted step bodies -------------------------------------------
@@ -565,6 +643,223 @@ class Engine:
                 self._ckv({"data": new_data, "scale_log2": new_scale}),
                 self._cst({"data": new_sdata, "scale_log2": new_sscale}))
 
+    # ---- speculative decoding bodies -----------------------------------
+    def _sub_verify(self, pp, x, dsub, ssub, table, lens, active, positions,
+                    tmask, sub):
+        """One attention sublayer of the verify step: append the whole
+        (k+1)-row block's K/V in one batched scatter, then attend every row
+        in ONE q-block kernel call — ``_sub_decode`` generalized from S=1.
+        Row j sits at position lens+j and attends causally through itself
+        (the same append-then-attend self-inclusive semantics as decode)."""
+        cfg = self.lm.cfg
+        h = rms_norm(x, pp["norm1"]["scale"], cfg.norm_eps)
+        qd, newd = _project(pp["mixer"], h, sub, cfg, positions)
+        new_dsub = {name: KC.append_tokens(dsub[name], ssub[name], new,
+                                           table, lens, active, self.pcfg)
+                    for name, new in newd.items()}
+        if self._fused_for(sub):
+            d = sub.mixer
+            b, s = x.shape[:2]
+            attn = KC.fused_attend(new_dsub["k"], new_dsub["v"], ssub["k"],
+                                   ssub["v"], qd["q"], table, lens,
+                                   self.pcfg, impl=self.ecfg.fused_impl,
+                                   plan=self.plan)
+            attn = attn[:, :, :d.real_heads].reshape(
+                b, s, d.real_heads * d.head_dim)
+            out = apply_site(pp["mixer"]["o"], attn, d.o, cfg)
+        else:
+            kv = {name: KC.gather_slots(new_dsub[name], ssub[name], table,
+                                        self.pcfg, h.dtype)
+                  for name in new_dsub}
+            out = _attend(pp["mixer"], qd, kv, sub, cfg, positions)
+        x = x + out
+        return sub_ffn_decode(pp, x, sub, cfg, self.plan,
+                              token_mask=tmask), new_dsub
+
+    def _verify_impl(self, params, pool, table, lens, active, tokens):
+        """Target forward over the (B, S=k+1) verify block: the incoming
+        token plus the k draft proposals, all scored in one step. The
+        q-block twin of ``_decode_impl`` — attention-only archs (enforced
+        at init), no health/state branches. Returns ((B, S, V) logits, new
+        KV pool); rejected positions' K/V stay as junk above the slot's
+        advanced length (see ``kv_cache.append_tokens``)."""
+        lm = self.lm
+        b, s = tokens.shape
+        x = embed_tokens(params, tokens, lm)
+        positions = lens[:, None] + jnp.arange(s)[None]
+        tmask = jnp.broadcast_to(active[:, None], (b, s))
+
+        def body(x, scan_in):
+            pp, dl, sl = scan_in
+            new = {}
+            for i, sub in enumerate(lm.period):
+                key = f"sub_{i}"
+                x, nd = self._sub_verify(pp[key], x, dl[key], sl[key],
+                                         table, lens, active, positions,
+                                         tmask, sub)
+                new[key] = nd
+            return x, new
+
+        x, new_data = jax.lax.scan(
+            body, x, (params["layers"], pool["data"], pool["scale_log2"]))
+        x = rms_norm(x, params["final_norm"]["scale"], lm.cfg.norm_eps)
+        logits = apply_site(params["head"], x, lm.head, lm.cfg)
+        return logits, self._ckv({"data": new_data,
+                                  "scale_log2": pool["scale_log2"]})
+
+    def _draft_step(self, dparams, dpool, table, lens, active, tokens):
+        """One S=1 decode step of the draft model over its private pool
+        (static identity table) — ``_decode_impl`` minus the state/health
+        branches (the draft is attention-only by construction). Appends go
+        through ``append_tokens`` for its past-horizon trash redirect: a
+        draft block overhanging ``max_len`` must not scribble on pages."""
+        dlm = self._draft
+        cfg = dlm.cfg
+        x = embed_tokens(dparams, tokens, dlm)
+        positions = A.len_positions(lens, x.shape[0])
+
+        def body(x, scan_in):
+            pp, dl, sl = scan_in
+            new = {}
+            for i, sub in enumerate(dlm.period):
+                key = f"sub_{i}"
+                h = rms_norm(x, pp[key]["norm1"]["scale"], cfg.norm_eps)
+                qd, newd = _project(pp[key]["mixer"], h, sub, cfg,
+                                    positions)
+                nd = {name: KC.append_tokens(dl[key][name], sl[key][name],
+                                             new_, table, lens, active,
+                                             self._draft_pcfg)
+                      for name, new_ in newd.items()}
+                kv = {name: KC.gather_slots(nd[name], sl[key][name], table,
+                                            self._draft_pcfg, h.dtype)
+                      for name in nd}
+                x = x + _attend(pp[key]["mixer"], qd, kv, sub, cfg,
+                                positions)
+                x = sub_ffn_decode(pp[key], x, sub, cfg, self.plan,
+                                   token_mask=active[:, None])
+                new[key] = nd
+            return x, new
+
+        x, new_data = jax.lax.scan(
+            body, x, (dparams["layers"], dpool["data"],
+                      dpool["scale_log2"]))
+        x = rms_norm(x, dparams["final_norm"]["scale"], cfg.norm_eps)
+        logits = apply_site(dparams["head"], x, dlm.head, cfg)
+        return logits[:, 0], {"data": new_data,
+                              "scale_log2": dpool["scale_log2"]}
+
+    def _draft_propose_impl(self, dparams, dpool, table, lens, active,
+                            tokens, key, temp, topk, topp):
+        """k draft decode steps (unrolled: k is small and static). Each
+        proposal is sampled from the PROCESSED draft distribution Q
+        (temperature/top-k/top-p applied) and Q itself is kept — the
+        rejection test needs the exact proposal distribution, and greedy
+        slots need their one-hots. Returns ((B, k) tokens, (B, k, V)
+        probs, new draft pool)."""
+        toks, probs = [], []
+        cur = tokens
+        for i in range(self.ecfg.spec_k):
+            logits, dpool = self._draft_step(dparams, dpool, table,
+                                             lens + i, active, cur)
+            qp = processed_probs(logits, temp, topk, topp)
+            t = sample_from_probs(qp, jax.random.fold_in(key, i))
+            toks.append(t)
+            probs.append(qp)
+            cur = t[:, None]
+        # trailing cache-fill step: each step above appends its INCOMING
+        # token, so after k steps the last proposal d_k has no K/V in the
+        # draft pool — and when the target accepts all k, the next round
+        # resumes at lens+k+1 and would attend over a zero hole at lens+k.
+        # Feed d_k once more (logits discarded) to complete the span; for
+        # rejected slots the write is junk above the final length, exactly
+        # like the target's own rejected rows.
+        _, dpool = self._draft_step(dparams, dpool, table,
+                                    lens + self.ecfg.spec_k, active, cur)
+        return jnp.stack(toks, axis=1), jnp.stack(probs, axis=1), dpool
+
+    def _draft_prefill(self, slot: int, st) -> None:
+        """Whole-prompt prefill of the draft model for one slot. The draft
+        always recomputes the full prompt (no chunking, no prefix sharing —
+        it is a fraction of the target's cost by construction); bucket
+        padding bounds its compiled shapes like the target's prefill."""
+        toks = st.req.prompt
+        padded = toks + [0] * (bucket_len(len(toks),
+                                          self.ecfg.prefill_bucket)
+                               - len(toks))
+        tok_arr = jnp.asarray(padded, jnp.int32)[None]
+        cache = self._draft_prefill_fns.get(len(padded))(
+            self._draft_params, tok_arr, jnp.int32(len(toks)))
+        self._draft_pool = self._write_prefill_jit(
+            self._draft_pool,
+            {k: cache[k] for k in self._draft_attn_keys},
+            self._draft_table[slot], jnp.int32(slot),
+            jnp.int32(len(toks)), pcfg=self._draft_pcfg)
+
+    def _spec_step(self, active_slots: list[int]) -> None:
+        """One speculative iteration over the current batch: k draft
+        proposals per slot, ONE q-block verify call on the target,
+        rejection sampling per slot (accepted prefix + bonus/replacement
+        token), then page-level rollback (``trim_unused``). Every emitted
+        token is a valid target sample, so greedy slots emit exactly the
+        non-speculative greedy sequence (one-hot distributions make each
+        accept/replace decision deterministic)."""
+        sched = self.sched
+        k = self.ecfg.spec_k
+        table = jnp.asarray(sched.page_table)
+        lens = jnp.asarray(sched.lens_vector())
+        active = jnp.asarray(sched.active_mask())
+        tokens = jnp.asarray(sched.tokens_vector())
+        sp = [sched.slots[s].req.sampling if sched.slots[s]
+              else SamplingParams() for s in range(self.pcfg.num_slots)]
+        temp = jnp.asarray([p.temperature for p in sp], jnp.float32)
+        topk = jnp.asarray([p.top_k for p in sp], jnp.int32)
+        topp = jnp.asarray([p.top_p for p in sp], jnp.float32)
+        dkey = jax.random.fold_in(self._key, self._nsample)
+        self._nsample += 1
+        akey = jax.random.fold_in(self._key, self._nsample)
+        self._nsample += 1
+        t0 = self.trace.clock() if self.trace is not None else 0.0
+        dtoks, dprobs, self._draft_pool = self._draft_propose_jit(
+            self._draft_params, self._draft_pool, self._draft_table, lens,
+            active, tokens, dkey, temp, topk, topp)
+        blk = jnp.concatenate([tokens, dtoks], axis=1)       # (B, k+1)
+        vlogits, self.pool = self._verify_jit(self.params, self.pool,
+                                              table, lens, active, blk)
+        acc_len, next_tok = self._accept_jit(vlogits, dprobs, dtoks, akey,
+                                             temp, topk, topp)
+        acc = np.asarray(acc_len)
+        nxt = np.asarray(next_tok)
+        dt = np.asarray(dtoks)
+        dur = (self.trace.clock() - t0) if self.trace is not None else None
+        accepted = emitted = 0
+        for slot in active_slots:
+            st = sched.slots[slot]
+            a = int(acc[slot])
+            accepted += a
+            # eos / max_new truncate the emission mid-prefix: tokens past
+            # the stop never leave the engine (their K/V junk sits above
+            # the slot's final length and the slot retires anyway)
+            for tok in [int(t) for t in dt[slot, :a]] + [int(nxt[slot])]:
+                st.generated.append(tok)
+                st.last_token = tok
+                emitted += 1
+                if st.done():
+                    break
+            sched.trim_unused(slot)
+            if st.done():
+                self._finish(slot)
+        free_pages = sched.alloc.free_pages if sched.paged else None
+        self.metrics.decode_step(emitted, free_pages=free_pages, dur=dur)
+        self.metrics.spec_step(len(active_slots), k * len(active_slots),
+                               accepted, emitted)
+        self._ledger_update("decode")
+        if self.trace is not None:
+            self.trace.emit("spec_step", step=self.metrics.decode_steps,
+                            n_active=len(active_slots),
+                            proposed=k * len(active_slots),
+                            accepted=accepted, emitted=emitted,
+                            free_pages=free_pages, dur=dur)
+
     # ---- memory ledger -------------------------------------------------
     def _ledger_update(self, phase: str | None = None) -> None:
         """Refresh every serve-side ledger site (host ints only — never
@@ -581,6 +876,11 @@ class Engine:
                 fp32=self.metrics.cache_bytes_fp32)
         led.set("state_pool", self.metrics.state_bytes,
                 fp32=self.metrics.state_bytes_fp32)
+        if self._spec:
+            led.set("draft_params", self._draft_params_nbytes,
+                    fp32=self._draft_params_nbytes_fp32)
+            led.set("draft_kv_pool", self._draft_pool_bytes,
+                    fp32=self._draft_pool_bytes_fp32)
         if self.sched.paged:
             logical, physical = self.sched.mapped_page_stats()
             pb = self._page_nbytes
@@ -722,6 +1022,12 @@ class Engine:
                     self.params, self.pool, self.spool, tok_arr, table,
                     jnp.int32(slot), jnp.int32(c0), jnp.int32(len(toks)))
         self.metrics.prefill(plen, computed=plen - resume)
+        if self._spec:
+            # the draft tracks the slot from position 0: full-prompt
+            # prefill into its private pool (a preempted request re-enters
+            # here with its generated prefix folded in, so the draft cache
+            # is rebuilt consistently too)
+            self._draft_prefill(slot, st)
         tok = int(self._sample(last_logits, [slot])[0])
         st.generated.append(tok)
         st.last_token = tok
@@ -772,12 +1078,15 @@ class Engine:
         active_slots = [i for i, s in enumerate(sched.slots) if s is not None]
         if not active_slots:
             return
-        # lazily map the page each active slot is about to write; preempt
-        # the youngest slot if the pool is exhausted
+        # lazily map the page(s) each active slot is about to write — one
+        # for plain decode, the k+1 verify span for speculative decoding;
+        # preempt the youngest slot if the pool is exhausted
+        span = self.ecfg.spec_k + 1 if self._spec else 1
         for slot in list(active_slots):
             if sched.slots[slot] is None:
                 continue
-            while not sched.ensure_page(slot):
+            while not (sched.ensure_page(slot) if span == 1
+                       else sched.ensure_span(slot, span)):
                 # capture the victim before retire clears its slot state
                 yst = (sched.slots[sched.admission_order[-1]]
                        if len(sched.admission_order) > 1 else None)
@@ -794,6 +1103,9 @@ class Engine:
                     break
         active_slots = [i for i, s in enumerate(sched.slots) if s is not None]
         if not active_slots:
+            return
+        if self._spec:
+            self._spec_step(active_slots)
             return
 
         table = jnp.asarray(sched.page_table)

@@ -224,7 +224,10 @@ def fused_attend(kdata_l: jax.Array, vdata_l: jax.Array, kscale_l: jax.Array,
     int8 pages in-kernel, and accumulates online-softmax attention per page
     — the (B, max_len, *feat) fp32 slot view is never materialized.
 
-    q: (B, Hq, Dh). Returns (B, Hq, Dh) in q.dtype.
+    q: (B, Hq, Dh) single-token decode, or (B, S, Hq, Dh) — a q-block
+    (chunked prefill / k-token speculative verify) whose rows sit at
+    positions ``lens .. lens + S - 1`` with a per-row causal mask. Returns
+    the same rank in q.dtype.
 
     ``plan``: a ``ShardPlan`` whose mesh head-shards the pool
     (``plan.kv_page_spec``) makes the walk run shard_map'd per device on
@@ -255,6 +258,36 @@ def append_token(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
                         pcfg.bits)
     else:
         vals = vals.astype(data_l.dtype)
+    return data_l.at[pages, offs].set(vals)
+
+
+def append_tokens(data_l: jax.Array, scale_l: jax.Array, new: jax.Array,
+                  table: jax.Array, lens: jax.Array, active: jax.Array,
+                  pcfg: PoolConfig) -> jax.Array:
+    """Scatter S new tokens per slot at positions lens..lens+S-1 (the
+    speculative-verify write: the incoming token plus the k draft tokens
+    land in one batched scatter).
+
+    new: (B, S, *feat) fp. Inactive slots and positions at/above
+    ``max_len`` (a draft block overhanging the slot horizon) are redirected
+    to the trash page. Like decode appends, values clip into the slot's
+    prefill scale. Rejected tokens' K/V stay in the pool as junk above the
+    slot's advanced length — the kernel's causal length mask never reads
+    them, and later writes at those positions overwrite in place, so
+    rollback needs no data movement (page bookkeeping only, see
+    ``Scheduler.trim_unused``)."""
+    b, s = new.shape[:2]
+    pos = lens[:, None] + jnp.arange(s)[None, :]             # (B, S)
+    page_idx = jnp.clip(pos // pcfg.page_size, 0, pcfg.pages_per_slot - 1)
+    pages = jnp.take_along_axis(table, page_idx, axis=1)
+    ok = active[:, None] & (pos < pcfg.max_len)
+    pages = jnp.where(ok, pages, pcfg.trash_page)
+    offs = pos % pcfg.page_size
+    if pcfg.quantized:
+        vals = quantize(new, scale_l.reshape((b,) + (1,) * (new.ndim - 1)),
+                        pcfg.bits)
+    else:
+        vals = new.astype(data_l.dtype)
     return data_l.at[pages, offs].set(vals)
 
 

@@ -75,6 +75,12 @@ class ServeMetrics:
                                 # (computed + prefix-cache hits); equals
                                 # prefill_tokens when no cache is attached
     preemptions: int = 0
+    # speculative-decoding counters (engine-maintained; see spec_step)
+    spec_steps: int = 0         # batched verify steps run
+    spec_slots: int = 0         # slot-steps verified (slots x steps)
+    spec_proposed: int = 0      # draft tokens proposed to the target
+    spec_accepted: int = 0      # draft tokens that passed rejection
+    spec_emitted: int = 0       # tokens emitted by spec steps (post-trunc)
     # prefix-cache counters (serve/prefix.py; engine-maintained)
     prefix_hit_tokens: int = 0  # prompt tokens served from cached pages
     cow_forks: int = 0          # copy-on-write page copies (mid-page hits)
@@ -169,6 +175,19 @@ class ServeMetrics:
     def preempted(self) -> None:
         self.preemptions += 1
 
+    def spec_step(self, n_slots: int, proposed: int, accepted: int,
+                  emitted: int) -> None:
+        """One speculative verify step: ``n_slots`` slots verified
+        ``proposed`` draft tokens total, of which ``accepted`` passed the
+        rejection test; ``emitted`` tokens actually left the engine
+        (accepted + the bonus/replacement token per slot, truncated by
+        max_new/eos)."""
+        self.spec_steps += 1
+        self.spec_slots += n_slots
+        self.spec_proposed += proposed
+        self.spec_accepted += accepted
+        self.spec_emitted += emitted
+
     # ---- quant health ---------------------------------------------------
     def record_health(self, site: str, clipped: int, total: int,
                       drift_sum: float = 0.0, drift_n: float = 0.0) -> None:
@@ -245,4 +264,17 @@ class ServeMetrics:
                                 if self.state_bytes else 0.0),
             "quant_health": {s: h.as_dict()
                              for s, h in sorted(self._health.items())},
+            # speculative decoding: acceptance rate over proposed draft
+            # tokens and mean tokens emitted per verified slot-step (the
+            # >1.0 figure is the whole point of drafting)
+            "spec": {
+                "steps": self.spec_steps,
+                "proposed": self.spec_proposed,
+                "accepted": self.spec_accepted,
+                "emitted": self.spec_emitted,
+                "acceptance_rate": (self.spec_accepted / self.spec_proposed
+                                    if self.spec_proposed else 0.0),
+                "tokens_per_step": (self.spec_emitted / self.spec_slots
+                                    if self.spec_slots else 0.0),
+            },
         }

@@ -1,10 +1,19 @@
-"""jit-safe per-slot token sampling: greedy / temperature / top-k / top-p.
+"""jit-safe per-slot token sampling: greedy / temperature / top-k / top-p,
+plus the speculative-decoding verify/accept math.
 
 One compiled function serves every slot mix: the sampling knobs are *data*
 (per-slot vectors), not static configuration, so requests with different
 temperatures/top-k/top-p batch into the same decode step. ``temperature <=
 0`` selects greedy argmax for that slot (the deterministic serving mode the
 fp32-parity tests rely on).
+
+Knob semantics (vLLM order): top-k truncates to the k largest logits FIRST,
+then the nucleus is computed over the renormalized truncated distribution.
+``top_p = 0`` degenerates to greedy-within-the-temperature-distribution:
+the argmax is always kept. Greedy rows never divide by the temperature
+floor, so their processed distribution (an argmax one-hot) is exact — the
+speculative accept/residual math reads these probabilities directly, which
+is what makes greedy spec-decode token-identical to non-speculative greedy.
 """
 from __future__ import annotations
 
@@ -21,26 +30,55 @@ class SamplingParams(NamedTuple):
     top_p: float = 1.0          # 1.0: disabled
 
 
+def _masked_row(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+                top_p: jax.Array) -> jax.Array:
+    """Temperature-scale one row (V,) of logits and -inf-mask everything
+    outside the top-k / nucleus truncation. Greedy rows (temp <= 0) skip
+    the temperature divide entirely — ``logits / 1e-6`` would overflow
+    large logits to ±inf and poison the probabilities read by the
+    speculative accept path."""
+    v = logits.shape[-1]
+    scaled = jnp.where(temp > 0.0,
+                       logits.astype(jnp.float32)
+                       / jnp.maximum(temp, 1e-6),
+                       logits.astype(jnp.float32))
+    desc = jnp.sort(scaled)[::-1]
+    # top-k first: keep the k largest sorted positions (k=0 disables)
+    keep_k = (top_k <= 0) | (jnp.arange(v) < top_k)
+    desc_k = jnp.where(keep_k, desc, -jnp.inf)
+    # nucleus over the RENORMALIZED truncated distribution: softmax of the
+    # top-k-masked sorted logits, so top-p thresholds on surviving mass
+    # only (mass top-k discarded never counts toward p)
+    probs = jax.nn.softmax(desc_k)
+    cum = jnp.cumsum(probs)
+    keep = (cum - probs < top_p) & keep_k
+    # the top logit is ALWAYS kept — at top_p = 0 the prefix test is
+    # all-False and the cutoff would otherwise mask every logit
+    keep = keep.at[0].set(True)
+    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf))
+    return jnp.where(scaled < cutoff, -jnp.inf, scaled)
+
+
+def _probs_row(logits: jax.Array, temp: jax.Array, top_k: jax.Array,
+               top_p: jax.Array) -> jax.Array:
+    """The processed sampling distribution of one row (V,): an argmax
+    one-hot for greedy rows, else softmax over the masked logits."""
+    masked = _masked_row(logits, temp, top_k, top_p)
+    onehot = jax.nn.one_hot(jnp.argmax(logits, axis=-1), logits.shape[-1],
+                            dtype=jnp.float32)
+    return jnp.where(temp <= 0.0, onehot, jax.nn.softmax(masked))
+
+
 def _sample_row(logits: jax.Array, key: jax.Array, temp: jax.Array,
                 top_k: jax.Array, top_p: jax.Array) -> jax.Array:
     """Sample one token from one slot's logits (V,)."""
-    v = logits.shape[-1]
-    greedy = temp <= 0.0
-    scaled = logits.astype(jnp.float32) / jnp.maximum(temp, 1e-6)
-    desc = jnp.sort(scaled)[::-1]
-    # top-k: drop logits below the k-th largest (k=0 disables)
-    kth = desc[jnp.clip(top_k - 1, 0, v - 1)]
-    masked = jnp.where((top_k > 0) & (scaled < kth), -jnp.inf, scaled)
-    # top-p (nucleus): keep the smallest prefix of the sorted distribution
-    # whose mass reaches p; implemented as a logit threshold so the mask
-    # applies in unsorted order. The top logit is always kept.
-    probs = jax.nn.softmax(desc)
-    cum = jnp.cumsum(probs)
-    keep = cum - probs < top_p
-    cutoff = jnp.min(jnp.where(keep, desc, jnp.inf))
-    masked = jnp.where(masked < cutoff, -jnp.inf, masked)
+    masked = _masked_row(logits, temp, top_k, top_p)
     sampled = jax.random.categorical(key, masked)
-    return jnp.where(greedy, jnp.argmax(logits, axis=-1), sampled)
+    return jnp.where(temp <= 0.0, jnp.argmax(logits, axis=-1), sampled)
+
+
+def _fold_keys(key: jax.Array, b: int) -> jax.Array:
+    return jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(b))
 
 
 def sample_tokens(logits: jax.Array, key: jax.Array, temperature: jax.Array,
@@ -50,8 +88,95 @@ def sample_tokens(logits: jax.Array, key: jax.Array, temperature: jax.Array,
     Each slot gets an independent stream derived from ``key`` by fold-in, so
     slot outcomes don't depend on which other requests share the batch.
     """
-    b = logits.shape[0]
-    keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(jnp.arange(b))
     return jax.vmap(_sample_row)(
-        logits, keys, temperature.astype(jnp.float32),
-        top_k.astype(jnp.int32), top_p.astype(jnp.float32)).astype(jnp.int32)
+        logits, _fold_keys(key, logits.shape[0]),
+        temperature.astype(jnp.float32), top_k.astype(jnp.int32),
+        top_p.astype(jnp.float32)).astype(jnp.int32)
+
+
+def processed_probs(logits: jax.Array, temperature: jax.Array,
+                    top_k: jax.Array, top_p: jax.Array) -> jax.Array:
+    """Per-slot processed sampling distributions.
+
+    logits: (B, V) or (B, S, V) — knob vectors are (B,) either way (one
+    request's knobs govern every position of its verify block). Greedy
+    slots yield exact argmax one-hots.
+    """
+    t = temperature.astype(jnp.float32)
+    k = top_k.astype(jnp.int32)
+    p = top_p.astype(jnp.float32)
+    if logits.ndim == 3:
+        return jax.vmap(
+            lambda row, ti, ki, pi: jax.vmap(
+                lambda r: _probs_row(r, ti, ki, pi))(row))(logits, t, k, p)
+    return jax.vmap(_probs_row)(logits, t, k, p)
+
+
+def sample_from_probs(probs: jax.Array, key: jax.Array) -> jax.Array:
+    """Sample one token per slot from processed distributions (B, V); used
+    by the draft side of speculative decoding so the proposal really is
+    drawn from the same Q the accept test reads. One-hot rows (greedy)
+    sample their argmax deterministically."""
+    keys = _fold_keys(key, probs.shape[0])
+    return jax.vmap(
+        lambda p, k: jax.random.categorical(k, jnp.log(p))
+    )(probs, keys).astype(jnp.int32)
+
+
+def _spec_accept_row(tprobs: jax.Array, qprobs: jax.Array,
+                     dtok: jax.Array, key: jax.Array):
+    """Rejection-sample one slot. tprobs: (k+1, V) target distributions at
+    positions 0..k (row k is the bonus position past the last draft token),
+    qprobs: (k, V) draft distributions, dtok: (k,) draft tokens.
+
+    Returns (accept_len in [0, k], next_token). The accepted prefix plus
+    ``next_token`` is distributed exactly as k+1 sequential target samples
+    (Leviathan et al. 2023): position i accepts with prob min(1, p_i/q_i);
+    on the first rejection the replacement is drawn from the normalized
+    residual max(P - Q, 0); if all k accept, the bonus token is drawn from
+    the target's position-k distribution.
+    """
+    k = dtok.shape[0]
+    ukey, skey = jax.random.split(key)
+    pos = jnp.arange(k)
+    p_tok = tprobs[pos, dtok]
+    q_tok = qprobs[pos, dtok]
+    u = jax.random.uniform(ukey, (k,))
+    # strict <: greedy mismatch has p_tok = 0, so u*q < 0 never accepts;
+    # greedy match has p = q = 1 and u < 1 always accepts
+    accept = u * q_tok < p_tok
+    a = jnp.sum(jnp.cumprod(accept.astype(jnp.int32))).astype(jnp.int32)
+    p_a = jnp.take(tprobs, a, axis=0)
+    # Q at the rejection position; zero when all k accepted (a == k), which
+    # turns the residual into the plain bonus distribution P_k
+    q_a = jnp.where(a < k,
+                    jnp.take(qprobs, jnp.minimum(a, k - 1), axis=0), 0.0)
+    resid = jnp.maximum(p_a - q_a, 0.0)
+    # numerical guard: a rejection implies P != Q so the residual has mass,
+    # but fall back to P_a if roundoff zeroes it out
+    dist = jnp.where(jnp.sum(resid) > 0.0, resid, p_a)
+    nxt = jax.random.categorical(skey, jnp.log(dist)).astype(jnp.int32)
+    return a, nxt
+
+
+def spec_accept(target_logits: jax.Array, draft_probs: jax.Array,
+                draft_tokens: jax.Array, key: jax.Array,
+                temperature: jax.Array, top_k: jax.Array,
+                top_p: jax.Array):
+    """Batched speculative verify/accept.
+
+    target_logits: (B, k+1, V) — the target model's logits at the incoming
+    token plus the k draft tokens; draft_probs: (B, k, V) — the processed
+    draft distributions each proposal was sampled from; draft_tokens:
+    (B, k). Per-slot knob vectors (B,) are applied to the target logits
+    with the same processing as normal decode, so every emitted token is a
+    valid sample of the target's per-position distribution.
+
+    Returns (accept_len (B,) int32, next_token (B,) int32): slot b emits
+    draft_tokens[b, :accept_len[b]] followed by next_token[b].
+    """
+    tprobs = processed_probs(target_logits, temperature, top_k, top_p)
+    keys = _fold_keys(key, target_logits.shape[0])
+    return jax.vmap(_spec_accept_row)(
+        tprobs, draft_probs.astype(jnp.float32),
+        draft_tokens.astype(jnp.int32), keys)

@@ -274,6 +274,54 @@ class Scheduler:
                             pos=int(st.next_pos))
         return True
 
+    def ensure_span(self, slot: int, n: int) -> bool:
+        """Map every page covering positions ``next_pos .. next_pos+n-1``
+        — the k+1-token speculative write span (``ensure_page`` is the
+        n=1 case). Positions at/above the slot horizon are clamped: their
+        writes go to the trash page, so they need no mapping. Returns
+        False when the pool is exhausted (caller should preempt)."""
+        if not self.paged:
+            return True
+        st = self.slots[slot]
+        ps = self.pcfg.page_size
+        last = min(st.next_pos + n - 1, self.pcfg.max_len - 1)
+        need = last // ps + 1           # mapped-page count required
+        while True:
+            have = len(self.slot_shared[slot]) + len(self.slot_pages[slot])
+            if have >= need:
+                return True
+            pages = self.alloc_pages(1)
+            if pages is None:
+                return False
+            self.slot_pages[slot].append(pages[0])
+            self.page_table[slot, have] = pages[0]
+            if self.trace is not None:
+                self.trace.emit("page_alloc", slot=slot, page=pages[0],
+                                pos=int(have * ps))
+
+    def trim_unused(self, slot: int) -> int:
+        """Free trailing private pages above the page holding ``next_pos``
+        — the rollback half of speculative decoding: pages mapped for a
+        draft span whose tokens were rejected return to the free list
+        (their junk K/V sits above the slot's length and is never read).
+        Shared prefix pages are never trimmed. Returns the count freed."""
+        if not self.paged:
+            return 0
+        st = self.slots[slot]
+        keep = st.next_pos // self.pcfg.page_size + 1
+        n_shared = len(self.slot_shared[slot])
+        keep_private = max(0, keep - n_shared)
+        extra = self.slot_pages[slot][keep_private:]
+        if not extra:
+            return 0
+        self.slot_pages[slot] = self.slot_pages[slot][:keep_private]
+        have = n_shared + keep_private
+        self.page_table[slot, have:have + len(extra)] = self.pcfg.trash_page
+        self.alloc.free(extra)
+        if self.trace is not None:
+            self.trace.emit("page_free", slot=slot, n=len(extra))
+        return len(extra)
+
     def retire(self, slot: int) -> SlotState:
         st = self.slots[slot]
         if self.trace is not None and self.slot_pages[slot]:

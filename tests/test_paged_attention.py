@@ -13,7 +13,11 @@ page-scan the engine uses off-TPU) must agree with it:
     to the gather engine over staggered ragged requests (prompts and
     generations crossing page boundaries), in fp32 and int8 pools;
 (d) preemption + resume under page pressure keeps fused == gather;
-(e) MLA archs fall back to the gather reference and still match.
+(e) MLA archs fall back to the gather reference and still match;
+(f) q-block generalization (S query rows at positions lens..lens+S-1 with a
+    per-row causal mask — chunked prefill / speculative verify): kernel vs
+    oracle over S x heads x storage, BIT-locked to the jnp page-scan, and
+    rank-3 decode == rank-4 S=1.
 """
 import functools
 
@@ -159,6 +163,139 @@ def test_kernel_under_jit_and_scan():
     _, scanned = jax.lax.scan(body, 0, jnp.arange(2))
     np.testing.assert_array_equal(np.asarray(direct), np.asarray(scanned[0]))
     np.testing.assert_array_equal(np.asarray(direct), np.asarray(scanned[1]))
+
+
+# ---------------------------------------------------------------------------
+# (f) q-block differential: S query rows per slot (chunked prefill /
+#     speculative k-token verify) against the same oracles
+# ---------------------------------------------------------------------------
+
+def _synthetic_qblock(seed, *, b, pp, page, hkv, hq, dh, s, quantized):
+    """Random paged pool + a (B, S, Hq, Dh) q-block whose rows sit at
+    positions lens..lens+s-1 (every row within the slot horizon). lens
+    still hits first/boundary/last-fitting positions."""
+    q0, kd, vd, ks, vs, table, lens = _synthetic_pool(
+        seed, b=b, pp=pp, page=page, hkv=hkv, hq=hq, dh=dh,
+        quantized=quantized)
+    rng = np.random.RandomState(seed + 100)
+    hi = pp * page - s                  # last start where all rows fit
+    lens = jnp.asarray(rng.randint(0, hi + 1, (b,)), jnp.int32)
+    lens = lens.at[0].set(0).at[-1].set(hi)
+    if b > 2:
+        lens = lens.at[1].set(page - 1)     # rows straddle a page boundary
+    q = jnp.asarray(rng.randn(b, s, hq, dh), jnp.float32)
+    return q, kd, vd, ks, vs, table, lens
+
+
+def _gather_reference_qblock(q, kd, vd, ks, vs, table, lens, *, page,
+                             quantized):
+    """Oracle: dequantized gather + full-softmax attend with per-row causal
+    positions (row j of slot b attends cache positions <= lens[b]+j)."""
+    from dataclasses import dataclass
+
+    b, s, hq, dh = q.shape
+    pp = table.shape[1]
+    hkv = kd.shape[2]
+    pcfg = PC(num_slots=b, page_size=page, pages_per_slot=pp,
+              quantized=quantized)
+
+    @dataclass
+    class D:
+        num_heads: int
+        num_kv_heads: int
+        head_dim: int
+        real_heads: int
+
+    k = KC.gather_slots(kd, ks, table, pcfg, jnp.float32)
+    v = KC.gather_slots(vd, vs, table, pcfg, jnp.float32)
+    positions = lens[:, None] + jnp.arange(s)[None]
+    out = gqa_attend(q, k, v, D(hq, hkv, dh, hq), positions)
+    return out.reshape(b, s, hq, dh)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (6, 2), (3, 1)])  # MHA/GQA/MQA
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("s", [1, 4, 8])    # decode / spec-verify / chunk
+def test_qblock_kernel_matches_gather_reference(hq, hkv, quantized, s):
+    args = _synthetic_qblock(5, b=4, pp=5, page=8, hkv=hkv, hq=hq, dh=16,
+                             s=s, quantized=quantized)
+    ref = _gather_reference_qblock(*args, page=8, quantized=quantized)
+    out = PA.paged_attention_kernel(*args, page_size=8, quantized=quantized,
+                                    interpret=True)
+    assert out.shape == args[0].shape
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+@pytest.mark.parametrize("s", [1, 4, 8])
+def test_qblock_kernel_bit_locked_to_jnp_page_scan(quantized, s):
+    """The q-block kernel and the page-chunk=1 jnp scan share one block
+    update (``PA._block_update``) — BITWISE equal for every S."""
+    args = _synthetic_qblock(6, b=3, pp=4, page=8, hkv=2, hq=4, dh=16,
+                             s=s, quantized=quantized)
+    kout = PA.paged_attention_kernel(*args, page_size=8,
+                                     quantized=quantized, interpret=True)
+    jout = PA.paged_attention_jnp(*args, page_size=8, quantized=quantized,
+                                  page_chunk=1)
+    np.testing.assert_array_equal(np.asarray(kout), np.asarray(jout))
+
+
+@pytest.mark.parametrize("s", [3, 6])
+def test_qblock_chunked_page_scan_matches_reference(s):
+    args = _synthetic_qblock(7, b=4, pp=5, page=8, hkv=2, hq=4, dh=16,
+                             s=s, quantized=True)
+    ref = _gather_reference_qblock(*args, page=8, quantized=True)
+    for chunk in (2, 3, 5):
+        out = PA.paged_attention_jnp(*args, page_size=8, quantized=True,
+                                     page_chunk=chunk)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("quantized", [False, True])
+def test_qblock_rank3_equals_rank4_s1(quantized):
+    """Rank-3 (B, Hq, Dh) decode queries are the S=1 q-block squeezed:
+    both fused impls must return bitwise-identical values for both ranks."""
+    q, kd, vd, ks, vs, table, lens = _synthetic_pool(
+        8, b=3, pp=4, page=8, hkv=2, hq=4, dh=16, quantized=quantized)
+    for fn in (functools.partial(PA.paged_attention_kernel, interpret=True),
+               functools.partial(PA.paged_attention_jnp, page_chunk=1)):
+        r3 = fn(q, kd, vd, ks, vs, table, lens, page_size=8,
+                quantized=quantized)
+        r4 = fn(q[:, None], kd, vd, ks, vs, table, lens, page_size=8,
+                quantized=quantized)
+        assert r3.shape == q.shape
+        assert r4.shape == (3, 1, 4, 16)
+        np.testing.assert_array_equal(np.asarray(r3),
+                                      np.asarray(r4[:, 0]))
+
+
+def test_qblock_rows_match_sequential_single_token_calls():
+    """Row j of a q-block call equals an S=1 call issued at lens+j — the
+    property that makes ONE verify call equivalent to k+1 sequential decode
+    steps over the same pool."""
+    s = 4
+    args = _synthetic_qblock(9, b=3, pp=5, page=8, hkv=2, hq=4, dh=16,
+                             s=s, quantized=True)
+    q, kd, vd, ks, vs, table, lens = args
+    blk = PA.paged_attention_kernel(*args, page_size=8, quantized=True,
+                                    interpret=True)
+    for j in range(s):
+        row = PA.paged_attention_kernel(q[:, j], kd, vd, ks, vs, table,
+                                        lens + j, page_size=8,
+                                        quantized=True, interpret=True)
+        np.testing.assert_allclose(np.asarray(blk[:, j]), np.asarray(row),
+                                   rtol=1e-6, atol=1e-6)
+
+
+def test_qblock_ops_wrapper_rank4():
+    args = _synthetic_qblock(10, b=2, pp=3, page=8, hkv=2, hq=4, dh=16,
+                             s=3, quantized=True)
+    a = paged_attention(*args, page_size=8, quantized=True, impl="pallas")
+    b = paged_attention(*args, page_size=8, quantized=True, impl="jnp",
+                        page_chunk=1)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,285 @@
+"""Sampling-correctness suite for ``serve/sampling.py``.
+
+(a) processed distributions vs a numpy oracle over a temperature x top-k x
+    top-p grid (vLLM knob order: top-k truncates FIRST, the nucleus is
+    computed over the renormalized survivors);
+(b) the regression pins for the three bugs the speculative-decoding accept
+    math would otherwise inherit: knob-order disagreement, ``top_p = 0``
+    masking every logit, and greedy rows overflowing ``logits / 1e-6``;
+(c) distributional checks: empirical frequencies of ``sample_tokens`` match
+    the oracle distribution; per-slot fold-in makes a slot's draws
+    independent of who shares the batch;
+(d) ``spec_accept``: the emitted token of a k=1 speculative step is
+    distributed exactly as a direct sample of the processed target
+    distribution, for any draft distribution (Leviathan et al. 2023) — and
+    greedy slots accept iff draft argmax == target argmax.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serve.sampling import (processed_probs, sample_from_probs,
+                                  sample_tokens, spec_accept)
+
+
+# ---------------------------------------------------------------------------
+# numpy oracle (independent reimplementation of the knob semantics)
+# ---------------------------------------------------------------------------
+
+def np_processed(logits, temp, top_k, top_p):
+    """Processed sampling distribution of one row, in float64 numpy."""
+    logits = np.asarray(logits, np.float64)
+    v = logits.shape[-1]
+    if temp <= 0.0:
+        p = np.zeros(v)
+        p[int(np.argmax(logits))] = 1.0
+        return p
+    scaled = logits / max(temp, 1e-6)
+    order = np.argsort(-scaled, kind="stable")
+    desc = scaled[order]
+    keep_k = np.ones(v, bool) if top_k <= 0 else (np.arange(v) < top_k)
+    desc_k = np.where(keep_k, desc, -np.inf)
+    ex = np.exp(desc_k - desc_k.max())
+    probs = ex / ex.sum()
+    cum = np.cumsum(probs)
+    keep = ((cum - probs) < top_p) & keep_k
+    keep[0] = True
+    cutoff = desc[keep].min()
+    masked = np.where(scaled < cutoff, -np.inf, scaled)
+    ex = np.exp(masked - masked.max())
+    return ex / ex.sum()
+
+
+GRID = [(0.0, 0, 1.0), (1.0, 0, 1.0), (0.7, 3, 1.0), (1.3, 0, 0.8),
+        (0.9, 4, 0.6), (2.0, 2, 0.3), (0.5, 1, 1.0), (1.0, 0, 0.0)]
+
+
+@pytest.mark.parametrize("temp,top_k,top_p", GRID)
+def test_processed_probs_matches_numpy_oracle(temp, top_k, top_p):
+    rng = np.random.RandomState(0)
+    logits = rng.randn(6, 12).astype(np.float32) * 2.0
+    got = np.asarray(processed_probs(
+        jnp.asarray(logits),
+        jnp.full((6,), temp, jnp.float32),
+        jnp.full((6,), top_k, jnp.int32),
+        jnp.full((6,), top_p, jnp.float32)))
+    want = np.stack([np_processed(r, temp, top_k, top_p) for r in logits])
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_processed_probs_qblock_rank():
+    """(B, S, V) logits: one request's knobs govern every position."""
+    rng = np.random.RandomState(1)
+    logits = rng.randn(3, 4, 10).astype(np.float32)
+    temp = jnp.asarray([0.0, 0.8, 1.5], jnp.float32)
+    k = jnp.asarray([0, 3, 0], jnp.int32)
+    p = jnp.asarray([1.0, 0.7, 0.4], jnp.float32)
+    got = np.asarray(processed_probs(jnp.asarray(logits), temp, k, p))
+    assert got.shape == (3, 4, 10)
+    for b in range(3):
+        for s in range(4):
+            want = np_processed(logits[b, s], float(temp[b]), int(k[b]),
+                                float(p[b]))
+            np.testing.assert_allclose(got[b, s], want, rtol=1e-5,
+                                       atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# regression pins
+# ---------------------------------------------------------------------------
+
+def test_topk_before_topp_order_pin():
+    """A case where the knob orders disagree: probs ~ [.5, .2, .2, .1],
+    top_k=2, top_p=0.6. Correct (vLLM) order renormalizes the top-2 to
+    [.714, .286] and the nucleus keeps ONLY token 0 (token 1's prefix mass
+    .714 >= .6). Nucleus-over-the-full-distribution would keep token 1 too
+    (its full-dist prefix is .5 < .6)."""
+    probs = np.asarray([0.5, 0.2, 0.2, 0.1])
+    logits = jnp.asarray(np.log(probs), jnp.float32)[None]
+    dist = np.asarray(processed_probs(
+        logits, jnp.asarray([1.0], jnp.float32),
+        jnp.asarray([2], jnp.int32), jnp.asarray([0.6], jnp.float32)))[0]
+    assert dist[0] == pytest.approx(1.0)
+    assert dist[1:].max() == 0.0
+    # and the sampler only ever emits token 0
+    toks = np.asarray(sample_tokens(
+        jnp.broadcast_to(logits, (64, 4)), jax.random.PRNGKey(0),
+        jnp.full((64,), 1.0), jnp.full((64,), 2, jnp.int32),
+        jnp.full((64,), 0.6)))
+    assert (toks == 0).all()
+
+
+def test_top_p_zero_keeps_argmax():
+    """top_p = 0 used to -inf-mask EVERY logit (empty nucleus -> categorical
+    over all -inf). It must degenerate to greedy-within-temperature."""
+    rng = np.random.RandomState(2)
+    logits = rng.randn(5, 16).astype(np.float32)
+    dist = np.asarray(processed_probs(
+        jnp.asarray(logits), jnp.full((5,), 1.0),
+        jnp.zeros((5,), jnp.int32), jnp.zeros((5,), jnp.float32)))
+    assert np.isfinite(dist).all()
+    np.testing.assert_array_equal(np.argmax(dist, -1), np.argmax(logits, -1))
+    np.testing.assert_allclose(dist.max(-1), 1.0)
+    toks = np.asarray(sample_tokens(
+        jnp.asarray(logits), jax.random.PRNGKey(1), jnp.full((5,), 1.0),
+        jnp.zeros((5,), jnp.int32), jnp.zeros((5,), jnp.float32)))
+    np.testing.assert_array_equal(toks, np.argmax(logits, -1))
+
+
+def test_top_p_just_above_top_prob_keeps_two():
+    """top_p = p(top1) + eps keeps exactly the top two tokens (the second's
+    prefix mass p(top1) < top_p, the third's is >= top_p)."""
+    probs = np.asarray([0.6, 0.3, 0.08, 0.02])
+    logits = jnp.asarray(np.log(probs), jnp.float32)[None]
+    dist = np.asarray(processed_probs(
+        logits, jnp.asarray([1.0], jnp.float32),
+        jnp.zeros((1,), jnp.int32), jnp.asarray([0.61], jnp.float32)))[0]
+    assert dist[0] > 0 and dist[1] > 0
+    assert dist[2] == 0 and dist[3] == 0
+    np.testing.assert_allclose(dist[0] / dist[1], 2.0, rtol=1e-5)
+
+
+def test_greedy_rows_never_divide_by_temperature_floor():
+    """Greedy rows used to compute ``logits / 1e-6`` before the argmax
+    select — large logits overflowed to inf and poisoned the processed
+    probabilities the speculative accept path reads."""
+    logits = jnp.asarray([[3e5, -3e5, 1e5, 0.0]], jnp.float32)
+    dist = np.asarray(processed_probs(
+        logits, jnp.zeros((1,), jnp.float32), jnp.zeros((1,), jnp.int32),
+        jnp.ones((1,), jnp.float32)))[0]
+    assert np.isfinite(dist).all()
+    np.testing.assert_array_equal(dist, [1.0, 0.0, 0.0, 0.0])
+    tok = np.asarray(sample_tokens(
+        logits, jax.random.PRNGKey(2), jnp.zeros((1,), jnp.float32),
+        jnp.zeros((1,), jnp.int32), jnp.ones((1,), jnp.float32)))
+    assert tok[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# distributional checks
+# ---------------------------------------------------------------------------
+
+def _freqs(toks, v):
+    return np.bincount(np.asarray(toks).ravel(), minlength=v) / toks.size
+
+
+@pytest.mark.parametrize("temp,top_k,top_p",
+                         [(1.0, 0, 1.0), (0.8, 3, 1.0), (1.2, 0, 0.7),
+                          (0.9, 4, 0.5)])
+def test_sample_tokens_frequencies_match_oracle(temp, top_k, top_p):
+    """Empirical frequency of each token over N independent rows stays
+    within 5 sigma of the oracle probability (binomial std)."""
+    rng = np.random.RandomState(3)
+    v, n = 8, 4000
+    logits = rng.randn(v).astype(np.float32)
+    want = np_processed(logits, temp, top_k, top_p)
+    toks = sample_tokens(
+        jnp.broadcast_to(jnp.asarray(logits), (n, v)),
+        jax.random.PRNGKey(4), jnp.full((n,), temp),
+        jnp.full((n,), top_k, jnp.int32), jnp.full((n,), top_p))
+    got = _freqs(toks, v)
+    sigma = np.sqrt(want * (1 - want) / n) + 1e-9
+    assert (np.abs(got - want) < 5 * sigma + 1e-3).all(), (got, want)
+    # support exactness: zero-probability tokens never appear
+    assert got[want == 0].sum() == 0.0
+
+
+def test_mixed_batch_fold_in_independence():
+    """Slot i's draw depends only on (key, i, its own logits/knobs) — not
+    on which other requests share the batch."""
+    rng = np.random.RandomState(5)
+    logits = jnp.asarray(rng.randn(4, 10), jnp.float32)
+    temp = jnp.asarray([0.0, 1.0, 0.7, 1.3])
+    k = jnp.asarray([0, 0, 3, 2], jnp.int32)
+    p = jnp.asarray([1.0, 0.9, 1.0, 0.6])
+    key = jax.random.PRNGKey(6)
+    mixed = np.asarray(sample_tokens(logits, key, temp, k, p))
+    # same slots, different batch-mates: rows 0..1 with rows 2..3 replaced
+    other = jnp.asarray(rng.randn(4, 10), jnp.float32)
+    logits2 = jnp.concatenate([logits[:2], other[2:]], 0)
+    mixed2 = np.asarray(sample_tokens(
+        logits2, key, temp.at[2:].set(0.0), k, p))
+    np.testing.assert_array_equal(mixed[:2], mixed2[:2])
+
+
+def test_sample_from_probs_onehot_is_deterministic():
+    probs = jnp.asarray([[0.0, 1.0, 0.0], [1.0, 0.0, 0.0]], jnp.float32)
+    toks = np.asarray(sample_from_probs(probs, jax.random.PRNGKey(7)))
+    np.testing.assert_array_equal(toks, [1, 0])
+
+
+# ---------------------------------------------------------------------------
+# speculative verify/accept
+# ---------------------------------------------------------------------------
+
+def test_spec_accept_greedy_is_argmax_comparison():
+    """Greedy rows: accept iff draft token == target argmax; on rejection
+    the replacement IS the target argmax (one-hot residual)."""
+    rng = np.random.RandomState(8)
+    v, k = 12, 3
+    tlogits = jnp.asarray(rng.randn(2, k + 1, v), jnp.float32)
+    targmax = np.argmax(np.asarray(tlogits), -1)
+    # slot 0 drafts the argmax path (all accept); slot 1 diverges at pos 1
+    d0 = targmax[0, :k]
+    d1 = targmax[1, :k].copy()
+    d1[1] = (d1[1] + 1) % v
+    dtoks = jnp.asarray(np.stack([d0, d1]), jnp.int32)
+    dprobs = jnp.asarray(
+        jax.nn.one_hot(dtoks, v, dtype=jnp.float32))        # greedy Q
+    zeros = jnp.zeros((2,), jnp.float32)
+    acc, nxt = spec_accept(tlogits, dprobs, dtoks, jax.random.PRNGKey(9),
+                           zeros, jnp.zeros((2,), jnp.int32),
+                           jnp.ones((2,), jnp.float32))
+    acc, nxt = np.asarray(acc), np.asarray(nxt)
+    assert acc[0] == k and nxt[0] == targmax[0, k]      # bonus token
+    assert acc[1] == 1 and nxt[1] == targmax[1, 1]      # replacement
+
+
+def test_spec_accept_emitted_token_distribution():
+    """k=1 rejection sampling: the first emitted token (draft if accepted,
+    else residual replacement) is distributed exactly as the processed
+    target distribution — for a DIFFERENT draft distribution Q."""
+    rng = np.random.RandomState(10)
+    v, n = 6, 6000
+    tlog = rng.randn(v).astype(np.float32)
+    qlog = rng.randn(v).astype(np.float32)          # independent draft
+    temp, top_k, top_p = 1.0, 0, 1.0
+    want = np_processed(tlog, temp, top_k, top_p)
+    qdist = np_processed(qlog, temp, top_k, top_p)
+
+    tlogits = jnp.broadcast_to(jnp.asarray(tlog), (n, 2, v))
+    qprobs = jnp.broadcast_to(jnp.asarray(qdist, jnp.float32)[None, None],
+                              (n, 1, v))
+    dtoks = sample_from_probs(
+        jnp.broadcast_to(jnp.asarray(qdist, jnp.float32), (n, v)),
+        jax.random.PRNGKey(11))[:, None]
+    acc, nxt = spec_accept(tlogits, qprobs, dtoks, jax.random.PRNGKey(12),
+                           jnp.full((n,), temp), jnp.zeros((n,), jnp.int32),
+                           jnp.full((n,), top_p))
+    emitted = np.where(np.asarray(acc) >= 1, np.asarray(dtoks)[:, 0],
+                       np.asarray(nxt))
+    got = _freqs(emitted, v)
+    sigma = np.sqrt(want * (1 - want) / n) + 1e-9
+    assert (np.abs(got - want) < 5 * sigma + 1e-3).all(), (got, want)
+
+
+def test_spec_accept_respects_target_support():
+    """With a truncating target (top_k=2) the emitted token can never fall
+    outside the target's processed support, whatever the draft proposes."""
+    rng = np.random.RandomState(13)
+    v, n, k = 8, 2000, 2
+    tlog = rng.randn(v).astype(np.float32)
+    want = np_processed(tlog, 0.9, 2, 1.0)
+    tlogits = jnp.broadcast_to(jnp.asarray(tlog), (n, k + 1, v))
+    # uniform draft proposes everything, incl. out-of-support tokens
+    qprobs = jnp.full((n, k, v), 1.0 / v, jnp.float32)
+    dtoks = jnp.asarray(
+        np.random.RandomState(14).randint(0, v, (n, k)), jnp.int32)
+    acc, nxt = spec_accept(tlogits, qprobs, dtoks, jax.random.PRNGKey(15),
+                           jnp.full((n,), 0.9), jnp.full((n,), 2, jnp.int32),
+                           jnp.ones((n,), jnp.float32))
+    acc, nxt, dt = np.asarray(acc), np.asarray(nxt), np.asarray(dtoks)
+    emitted = [dt[i, :acc[i]].tolist() + [int(nxt[i])] for i in range(n)]
+    support = set(np.nonzero(want)[0].tolist())
+    assert all(t in support for row in emitted for t in row)

@@ -1,0 +1,268 @@
+"""Speculative-decoding acceptance tests.
+
+The contract: a spec engine (draft proposes k tokens, target verifies all
+k+1 positions in ONE q-block kernel call, rejection sampling accepts a
+prefix) emits tokens distributed exactly as the non-speculative engine —
+and for greedy requests that means TOKEN-IDENTICAL output, because every
+accept/replace decision reads argmax one-hots.
+
+(a) greedy spec == greedy non-spec across fp32/int8 pools, gather/fused
+    attention, a zoo draft (stablelm-3b drafting for yi-34b) and an
+    independent random draft;
+(b) page-pressure preemption + re-admission (rollback + draft re-prefill)
+    keeps the identity;
+(c) a self-draft (draft == target) accepts EVERYTHING — the canary for
+    draft-cache consistency (a stale/missing draft K/V position shows up
+    as acceptance < 1 long before it corrupts output);
+(d) eos / max_new truncation mid-emission;
+(e) telemetry: summary()["spec"] schema, ledger draft sites, spec_step
+    trace events;
+(f) config validation (missing draft, vocab mismatch, recurrent archs).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.configs as C
+from repro.models import build_lm, init_lm
+from repro.serve import Engine, EngineConfig, PoolConfig, SamplingParams
+from repro.sharding import ShardPlan
+
+PLAN = ShardPlan(mesh=None)
+
+
+def _setup(arch, seed=0, vocab=None):
+    cfg = C.get_reduced(arch).replace(dtype="float32", remat="none")
+    if vocab is not None:
+        cfg = cfg.replace(vocab_size=vocab)
+    lm = build_lm(cfg)
+    params = init_lm(jax.random.PRNGKey(seed), lm)
+    return cfg, lm, params
+
+
+def _prompts(cfg, n, lo, hi, seed=3):
+    rng = np.random.RandomState(seed)
+    return [rng.randint(0, cfg.vocab_size,
+                        int(rng.randint(lo, hi + 1))).tolist()
+            for _ in range(n)]
+
+
+def _run(lm, params, pcfg, prompts, gens, draft=None, spec_k=0,
+         sampling=None, eos_id=-1, trace=None, **ekw):
+    eng = Engine(lm, params, EngineConfig(pool=pcfg, spec_k=spec_k, **ekw),
+                 PLAN, draft=draft, trace=trace)
+    rids = [eng.submit(p, max_new_tokens=g,
+                       sampling=sampling or SamplingParams(), eos_id=eos_id)
+            for p, g in zip(prompts, gens)]
+    res = eng.run()
+    return [res[r].tokens for r in rids], eng
+
+
+# ---------------------------------------------------------------------------
+# (a) greedy token identity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantized,fused",
+                         [(False, False), (True, False), (True, True)])
+def test_greedy_spec_identical_to_nonspec(quantized, fused):
+    """Zoo draft pair: stablelm-3b (draft) proposes for yi-34b (target),
+    staggered ragged requests on 2 slots, generations crossing page
+    boundaries."""
+    cfg, lm, params = _setup("yi-34b")
+    _, dlm, dparams = _setup("stablelm-3b", seed=1, vocab=cfg.vocab_size)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=quantized)
+    prompts = _prompts(cfg, 4, 5, 14)
+    gens = [12, 9, 11, 10]
+    ref, _ = _run(lm, params, pcfg, prompts, gens, fused_attention=fused)
+    out, eng = _run(lm, params, pcfg, prompts, gens, draft=(dlm, dparams),
+                    spec_k=3, fused_attention=fused)
+    assert out == ref
+    spec = eng.summary()["spec"]
+    assert spec["steps"] > 0 and spec["proposed"] > 0
+    # first token per request comes from prefill, not a spec step
+    assert spec["emitted"] == sum(len(t) for t in out) - len(out)
+
+
+def test_spec_k_variants_all_identical():
+    """The emitted stream must not depend on k."""
+    cfg, lm, params = _setup("yi-34b")
+    _, dlm, dparams = _setup("stablelm-3b", seed=1, vocab=cfg.vocab_size)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=False)
+    prompts = _prompts(cfg, 2, 6, 12, seed=5)
+    gens = [10, 8]
+    ref, _ = _run(lm, params, pcfg, prompts, gens)
+    for k in (1, 2, 4):
+        out, _ = _run(lm, params, pcfg, prompts, gens, draft=(dlm, dparams),
+                      spec_k=k)
+        assert out == ref, k
+
+
+# ---------------------------------------------------------------------------
+# (b) preemption / rollback
+# ---------------------------------------------------------------------------
+
+def test_spec_preemption_and_resume_identity():
+    cfg, lm, params = _setup("yi-34b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      num_pages=5, quantized=False)
+    prompts = _prompts(cfg, 4, 5, 12, seed=7)
+    gens = [12, 12, 12, 12]
+    ref, ref_eng = _run(lm, params, pcfg, prompts, gens)
+    out, eng = _run(lm, params, pcfg, prompts, gens, draft=(lm, params),
+                    spec_k=3)
+    assert eng.summary()["preemptions"] >= 1
+    assert ref_eng.summary()["preemptions"] >= 1
+    assert out == ref
+
+
+def test_spec_rollback_frees_overhang_pages():
+    """A rejected draft span must not leak its speculatively-mapped pages:
+    after every request retires all pages are back on the free list."""
+    cfg, lm, params = _setup("yi-34b")
+    _, dlm, dparams = _setup("stablelm-3b", seed=2, vocab=cfg.vocab_size)
+    pcfg = PoolConfig(num_slots=2, page_size=4, pages_per_slot=10,
+                      quantized=False)
+    prompts = _prompts(cfg, 3, 5, 10, seed=9)
+    out, eng = _run(lm, params, pcfg, prompts, [9, 8, 7],
+                    draft=(dlm, dparams), spec_k=4)
+    assert eng.sched.alloc.free_pages == pcfg.total_pages
+
+
+# ---------------------------------------------------------------------------
+# (c) self-draft acceptance canary
+# ---------------------------------------------------------------------------
+
+def test_self_draft_accepts_everything():
+    """draft == target on the gather path: every proposal must be accepted
+    (greedy AND sampled — P == Q makes the accept test pass with prob 1).
+    Anything below 1.0 means the draft's cache diverged from the target's
+    context (e.g. the last proposal's K/V missing after a fully-accepted
+    block)."""
+    cfg, lm, params = _setup("yi-34b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=False)
+    prompts = _prompts(cfg, 4, 5, 14)
+    for sampling in (SamplingParams(),
+                     SamplingParams(temperature=0.9, top_k=20, top_p=0.95)):
+        out, eng = _run(lm, params, pcfg, prompts, [12, 9, 11, 10],
+                        draft=(lm, params), spec_k=3, sampling=sampling)
+        spec = eng.summary()["spec"]
+        assert spec["acceptance_rate"] == 1.0, (sampling, spec)
+        assert spec["tokens_per_step"] > 1.0
+
+
+def test_sampled_spec_runs_and_completes():
+    """Sampled requests with an independent draft: rejection sampling keeps
+    every request completing to its full horizon."""
+    cfg, lm, params = _setup("yi-34b")
+    _, dlm, dparams = _setup("stablelm-3b", seed=1, vocab=cfg.vocab_size)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=True)
+    prompts = _prompts(cfg, 3, 5, 12, seed=11)
+    out, eng = _run(lm, params, pcfg, prompts, [8, 8, 8],
+                    draft=(dlm, dparams), spec_k=2,
+                    sampling=SamplingParams(temperature=1.0, top_k=40,
+                                            top_p=0.9))
+    assert all(len(t) == 8 for t in out)
+
+
+# ---------------------------------------------------------------------------
+# (d) truncation
+# ---------------------------------------------------------------------------
+
+def test_eos_truncates_mid_block():
+    """Pick eos = a token the greedy reference emits mid-stream: the spec
+    engine must stop at exactly the same place even when that token lands
+    in the middle of an accepted draft block."""
+    cfg, lm, params = _setup("yi-34b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=False)
+    prompts = _prompts(cfg, 2, 6, 12, seed=13)
+    ref, _ = _run(lm, params, pcfg, prompts, [12, 12])
+    eos = ref[0][4]     # 5th generated token of request 0
+    ref_e, _ = _run(lm, params, pcfg, prompts, [12, 12], eos_id=eos)
+    out_e, eng = _run(lm, params, pcfg, prompts, [12, 12],
+                      draft=(lm, params), spec_k=3, eos_id=eos)
+    assert out_e == ref_e
+    assert out_e[0][-1] == eos and len(out_e[0]) <= 5
+
+
+def test_max_new_exact():
+    cfg, lm, params = _setup("yi-34b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=False)
+    prompts = _prompts(cfg, 2, 6, 10, seed=15)
+    # max_new not a multiple of k+1: the last block must truncate
+    out, _ = _run(lm, params, pcfg, prompts, [7, 5], draft=(lm, params),
+                  spec_k=3)
+    assert [len(t) for t in out] == [7, 5]
+
+
+# ---------------------------------------------------------------------------
+# (e) telemetry
+# ---------------------------------------------------------------------------
+
+def test_spec_summary_ledger_and_trace():
+    from repro.obs import TraceRecorder
+    cfg, lm, params = _setup("yi-34b")
+    _, dlm, dparams = _setup("stablelm-3b", seed=1, vocab=cfg.vocab_size)
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8,
+                      quantized=True)
+    trace = TraceRecorder()
+    prompts = _prompts(cfg, 2, 6, 12, seed=17)
+    out, eng = _run(lm, params, pcfg, prompts, [8, 6],
+                    draft=(dlm, dparams), spec_k=2, trace=trace)
+    s = eng.summary()
+    spec = s["spec"]
+    for key in ("steps", "proposed", "accepted", "emitted",
+                "acceptance_rate", "tokens_per_step"):
+        assert key in spec
+    assert spec["proposed"] >= spec["accepted"] >= 0
+    assert 0.0 <= spec["acceptance_rate"] <= 1.0
+    assert spec["emitted"] == sum(len(t) for t in out) - len(out)
+    # ledger: draft sites are counted residents
+    sites = s["memory"]["sites"]
+    assert "draft_params" in sites and "draft_kv_pool" in sites
+    assert sites["draft_kv_pool"]["bytes"] > 0
+    # trace: spec_step events carry the acceptance telemetry
+    ev = trace.events("spec_step")
+    assert ev and all("accepted" in e.fields and "proposed" in e.fields
+                      for e in ev)
+    assert sum(e.fields["emitted"] for e in ev) == spec["emitted"]
+
+
+# ---------------------------------------------------------------------------
+# (f) validation
+# ---------------------------------------------------------------------------
+
+def test_spec_requires_draft_and_matching_vocab():
+    cfg, lm, params = _setup("yi-34b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8)
+    with pytest.raises(ValueError, match="draft"):
+        Engine(lm, params, EngineConfig(pool=pcfg, spec_k=2), PLAN)
+    _, dlm, dparams = _setup("stablelm-3b", seed=1,
+                             vocab=cfg.vocab_size + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        Engine(lm, params, EngineConfig(pool=pcfg, spec_k=2), PLAN,
+               draft=(dlm, dparams))
+    with pytest.raises(ValueError, match="spec_k"):
+        Engine(lm, params, EngineConfig(pool=pcfg, spec_k=-1), PLAN)
+
+
+def test_spec_rejects_recurrent_archs():
+    cfg, lm, params = _setup("yi-34b")
+    rcfg, rlm, rparams = _setup("rwkv6-1.6b")
+    pcfg = PoolConfig(num_slots=2, page_size=8, pages_per_slot=8)
+    # recurrent draft
+    with pytest.raises(NotImplementedError, match="DRAFT"):
+        Engine(lm, params, EngineConfig(pool=pcfg, spec_k=2), PLAN,
+               draft=(rlm, rparams))
+    # recurrent target
+    _, dlm, dparams = _setup("stablelm-3b", seed=1,
+                             vocab=rcfg.vocab_size)
+    with pytest.raises(NotImplementedError, match="TARGET"):
+        Engine(rlm, rparams, EngineConfig(pool=pcfg, spec_k=2), PLAN,
+               draft=(dlm, dparams))
